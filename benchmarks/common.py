@@ -1,0 +1,53 @@
+"""Shared benchmark utilities: build the four measured systems + CSV rows.
+
+Measured systems (paper analogues on one toolchain, DESIGN.md §2):
+  baseline   — 'as-written' lowering: authored loop order, innermost-only
+               vectorization, no idioms (the clang/icc -O3 analogue)
+  sched_raw  — scheduled WITHOUT normalization: canonical vectorizer +
+               idiom detection applied to the authored structure (the
+               non-normalizing auto-scheduler analogue: Polly/Tiramisu)
+  norm_only  — normalization WITHOUT the recipe database/idioms
+  daisy      — the full pipeline: normalize -> idioms -> transfer-tune
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.core import Daisy, Schedule, compile_jax, normalize
+from repro.core.scheduler import random_inputs
+from repro.core.util import time_fn
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")
+
+
+def timed(fn, inputs, repeats=5) -> float:
+    return time_fn(lambda: fn(inputs), repeats=repeats)
+
+
+def build_baseline(prog):
+    return jax.jit(compile_jax(prog, Schedule(mode="as_written", use_idioms=False)))
+
+
+def build_sched_raw(prog):
+    # scheduled, but on the UN-normalized structure
+    return jax.jit(compile_jax(prog, Schedule(mode="canonical", use_idioms=True)))
+
+
+def build_norm_only(prog):
+    return jax.jit(compile_jax(normalize(prog), Schedule(mode="canonical", use_idioms=False)))
+
+
+def build_daisy(daisy: Daisy, prog):
+    fn, plan = daisy.compile(prog)
+    return fn, plan
+
+
+def inputs_for(prog, seed=0):
+    return random_inputs(prog, seed=seed, dtype=np.float32)

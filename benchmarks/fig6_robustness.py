@@ -1,0 +1,56 @@
+"""Fig. 6 — auto-scheduler robustness: A vs B variants across 15 benchmarks.
+
+For each benchmark and each system we report t(A), t(B) and the ratio
+t(B)/t(A).  The paper's claim: daisy's ratio stays ~1 (mean 5%, max 14%)
+while non-normalizing systems diverge by up to an order of magnitude.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Daisy
+from repro.polybench import BENCHMARKS, NAMES
+
+from .common import build_baseline, build_daisy, build_sched_raw, emit, inputs_for, timed
+
+SIZE = "bench"
+
+
+def run(repeats: int = 3, size: str = SIZE, names=NAMES) -> dict:
+    daisy = Daisy()
+    daisy.seed([BENCHMARKS[n].make("a", size) for n in names], search=False)
+
+    ratios: dict[str, list[float]] = {"baseline": [], "sched_raw": [], "daisy": []}
+    for name in names:
+        b = BENCHMARKS[name]
+        pa, pb = b.make("a", size), b.make("b", size)
+        inp = inputs_for(pa)
+        t = {}
+        for sysname, builder in (
+            ("baseline", build_baseline), ("sched_raw", build_sched_raw),
+        ):
+            for var, prog in (("a", pa), ("b", pb)):
+                t[(sysname, var)] = timed(builder(prog), inp, repeats)
+        fa, _ = build_daisy(daisy, pa)
+        fb, _ = build_daisy(daisy, pb)
+        t[("daisy", "a")] = timed(fa, inp, repeats)
+        t[("daisy", "b")] = timed(fb, inp, repeats)
+
+        for sysname in ("baseline", "sched_raw", "daisy"):
+            ta, tb = t[(sysname, "a")], t[(sysname, "b")]
+            ratio = tb / ta
+            ratios[sysname].append(max(ratio, 1.0 / ratio))
+            emit(f"fig6/{name}/{sysname}_A", ta, f"ratioBA={ratio:.2f}")
+            emit(f"fig6/{name}/{sysname}_B", tb, "")
+    out = {}
+    for sysname, rs in ratios.items():
+        gm = float(np.exp(np.mean(np.log(rs))))
+        mx = float(np.max(rs))
+        out[sysname] = (gm, mx)
+        emit(f"fig6/SUMMARY/{sysname}", 0.0,
+             f"geomean_AB_divergence={gm:.3f} max={mx:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Fig. 7 — ablation: clang / tuning-only / normalization-only / full daisy.
+
+Shows both components are required: without normalization the database
+misses (structure mismatch); without the recipes the canonical form is not
+enough to reach the best schedules.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Daisy
+from repro.polybench import BENCHMARKS
+
+from .common import (
+    build_baseline, build_daisy, build_norm_only, build_sched_raw, emit,
+    inputs_for, timed,
+)
+
+SUBSET = ("gemm", "2mm", "3mm", "bicg", "gemver", "jacobi-2d", "fdtd-2d", "syrk")
+
+
+def run(repeats: int = 3, size: str = "bench") -> dict:
+    daisy = Daisy()
+    daisy.seed([BENCHMARKS[n].make("a", size) for n in SUBSET], search=False)
+    speedups: dict[str, list[float]] = {"sched_raw": [], "norm_only": [], "daisy": []}
+    for name in SUBSET:
+        b = BENCHMARKS[name]
+        for var in ("a", "b"):
+            prog = b.make(var, size)
+            inp = inputs_for(prog)
+            t_base = timed(build_baseline(prog), inp, repeats)
+            t_raw = timed(build_sched_raw(prog), inp, repeats)
+            t_norm = timed(build_norm_only(prog), inp, repeats)
+            fd, _ = build_daisy(daisy, prog)
+            t_daisy = timed(fd, inp, repeats)
+            emit(f"fig7/{name}_{var}/clang", t_base, "")
+            emit(f"fig7/{name}_{var}/tuning_only", t_raw, f"x{t_base / t_raw:.2f}")
+            emit(f"fig7/{name}_{var}/norm_only", t_norm, f"x{t_base / t_norm:.2f}")
+            emit(f"fig7/{name}_{var}/daisy", t_daisy, f"x{t_base / t_daisy:.2f}")
+            speedups["sched_raw"].append(t_base / t_raw)
+            speedups["norm_only"].append(t_base / t_norm)
+            speedups["daisy"].append(t_base / t_daisy)
+    out = {}
+    for k, v in speedups.items():
+        gm = float(np.exp(np.mean(np.log(v))))
+        out[k] = gm
+        emit(f"fig7/SUMMARY/{k}", 0.0, f"geomean_speedup_vs_clang={gm:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

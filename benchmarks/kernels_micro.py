@@ -1,0 +1,42 @@
+"""Kernel microbenches: XLA-path wall time on CPU + interpret-mode checks.
+
+Interpret mode executes the kernel body in Python (correctness only); the
+wall numbers that matter for the TPU target come from the roofline analysis
+(benchmarks/roofline_report.py), not CPU timing.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.core.util import time_fn
+
+from .common import emit
+
+
+def run(repeats: int = 5) -> None:
+    rng = np.random.default_rng(0)
+    for m, n, k in ((512, 512, 512), (1024, 1024, 512)):
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+        f = jax.jit(lambda a, b: ref.matmul(a, b))
+        t = time_fn(lambda: f(x, y), repeats=repeats)
+        flops = 2 * m * n * k
+        emit(f"kernels/gemm_xla_{m}x{n}x{k}", t, f"gflops={flops / t / 1e3:.1f}")
+    for bh, s, d in ((8, 1024, 64), (8, 2048, 64)):
+        q = jnp.asarray(rng.normal(size=(bh, s, d)), jnp.float32)
+        f = jax.jit(lambda q: ops.attention(q, q, q, causal=True))
+        t = time_fn(lambda: f(q), repeats=repeats)
+        emit(f"kernels/attn_xla_bh{bh}_s{s}", t, "")
+    # interpret-mode correctness spot checks (already swept in tests/)
+    x = rng.normal(size=(128, 96)).astype(np.float32)
+    y = rng.normal(size=(96, 64)).astype(np.float32)
+    err = float(np.abs(np.asarray(ops.matmul(x, y, backend="pallas_interpret",
+                                             tile=(32, 32, 32))) - x @ y).max())
+    emit("kernels/gemm_pallas_interpret_err", 0.0, f"maxerr={err:.1e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Roofline rows from the dry-run artifacts (one per arch x shape x mesh)."""
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.launch.roofline import load_cells
+
+from .common import emit
+
+
+def run(outdir: str = "dryrun_out") -> None:
+    if not Path(outdir).exists():
+        emit("roofline/missing", 0.0, f"no {outdir}/ — run repro.launch.dryrun first")
+        return
+    for c in load_cells(outdir):
+        name = f"roofline/{c.arch}/{c.shape}/{c.mesh}"
+        if c.status != "ok":
+            emit(name, 0.0, c.status)
+            continue
+        emit(
+            name,
+            c.step_time * 1e6,  # the dominant-term step time in us
+            f"compute={c.compute_s:.3e}s memory={c.memory_s:.3e}s "
+            f"collective={c.collective_s:.3e}s dominant={c.dominant} "
+            f"useful={c.useful_ratio:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

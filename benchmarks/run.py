@@ -1,0 +1,45 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig1,fig6,fig7,fig9,table1,fig11,kernels,roofline")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args()
+
+    from . import (fig1_gemm, fig6_robustness, fig7_ablation, fig9_python,
+                   fig11_cloudsc_full, kernels_micro, roofline_report,
+                   table1_cloudsc)
+
+    suites = {
+        "fig1": lambda: fig1_gemm.run(repeats=args.repeats),
+        "fig6": lambda: fig6_robustness.run(repeats=args.repeats),
+        "fig7": lambda: fig7_ablation.run(repeats=args.repeats),
+        "fig9": lambda: fig9_python.run(repeats=args.repeats),
+        "table1": lambda: table1_cloudsc.run(repeats=args.repeats),
+        "fig11": lambda: fig11_cloudsc_full.run(repeats=args.repeats),
+        "kernels": lambda: kernels_micro.run(repeats=args.repeats),
+        "roofline": lambda: roofline_report.run(),
+    }
+    only = args.only.split(",") if args.only else list(suites)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in only:
+        try:
+            suites[name]()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

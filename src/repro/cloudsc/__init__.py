@@ -1,0 +1,2 @@
+from .erosion import erosion_program  # noqa: F401
+from .scheme import mini_cloudsc_program  # noqa: F401

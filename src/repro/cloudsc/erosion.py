@@ -1,0 +1,135 @@
+"""CLOUDSC §5.1 — the erosion-of-clouds loop nest (paper Fig. 10a) in the IR.
+
+The nest updates ``ZTP1`` (temperature) and ``ZQSMIX`` (mixed saturation)
+over the NPROMA dimension ``JL`` inside the vertical loop ``JK``, computing
+several scalar intermediates per point via the IFS thermodynamic functions
+FOEEWM / FOEDEM / FOELDCPM.  Constants are the published IFS values.
+
+Memory layout note: the Fortran code accesses ``ZTP1(JL,JK)`` column-major,
+so JL is the contiguous dimension.  The row-major IR therefore declares the
+arrays ``(KLEV, NPROMA)`` and indexes ``[JK, JL]`` — identical locality.
+
+The scalars (ZQP, ZQSAT, ZCOR, ZCOND, ZCOND1) are genuine 0-d containers;
+the normalizer's scalar expansion promotes them to ``_0(JL)`` arrays exactly
+as in Fig. 10b, which unlocks maximal fission and JL vectorization.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.ir import Array, Computation, Loop, Program, acc, aff
+
+# IFS surrogate constants (physically plausible; ratios match the paper)
+RTT = 273.16
+R2ES = 611.21 * 0.621981
+R3LES, R3IES = 17.502, 22.587
+R4LES, R4IES = 32.19, -0.7
+RTWAT = RTT
+RTICE = RTT - 23.0
+RTWAT_RTICE_R = 1.0 / (RTWAT - RTICE)
+RETV = 0.608
+RCPD = 1004.709
+RLVTT, RLSTT = 2.5008e6, 2.8345e6
+RALVDCP, RALSDCP = RLVTT / RCPD, RLSTT / RCPD
+R5LES = R3LES * (RTT - R4LES)
+R5IES = R3IES * (RTT - R4IES)
+R5ALVCP = R5LES * RALVDCP
+R5ALSCP = R5IES * RALSDCP
+
+
+def _alpha(t, xp):
+    """liquid fraction weight: MIN(1, ((MAX(RTICE,MIN(RTWAT,T))-RTICE)*R)**2)."""
+    clip = xp.maximum(RTICE, xp.minimum(RTWAT, t))
+    w = ((clip - RTICE) * RTWAT_RTICE_R) ** 2
+    return xp.minimum(1.0, w)
+
+
+def _xp(t):
+    import jax.numpy as jnp
+
+    return np if isinstance(t, (float, np.floating, np.ndarray)) else jnp
+
+
+def foeewm(t):
+    xp = _xp(t)
+    a = _alpha(t, xp)
+    return R2ES * (
+        a * xp.exp(R3LES * (t - RTT) / (t - R4LES))
+        + (1.0 - a) * xp.exp(R3IES * (t - RTT) / (t - R4IES))
+    )
+
+
+def foedem(t):
+    xp = _xp(t)
+    a = _alpha(t, xp)
+    return a * R5ALVCP * (1.0 / (t - R4LES) ** 2) + (1.0 - a) * R5ALSCP * (
+        1.0 / (t - R4IES) ** 2
+    )
+
+
+def foeldcpm(t):
+    xp = _xp(t)
+    a = _alpha(t, xp)
+    return a * RALVDCP + (1.0 - a) * RALSDCP
+
+
+def erosion_program(nproma: int = 128, klev: int = 137, name: str = "cloudsc_erosion") -> Program:
+    """The Fig. 10a loop nest: DO JK / DO JL / <scalar chain>."""
+    A = lambda n: acc(n, "JK", "JL")  # noqa: E731
+    S = lambda n: acc(n)  # 0-d scalar  # noqa: E731
+
+    def comp(nm, write, reads, expr, accumulate=None):
+        return Computation(nm, write, tuple(reads), expr, accumulate)
+
+    body = (
+        comp("zqp", S("ZQP"), [A("PAP")], lambda p: 1.0 / p),
+        # first saturation pass
+        comp("qs1", S("ZQSAT"), [A("ZTP1"), S("ZQP")], lambda t, qp: foeewm(t) * qp),
+        comp("qs1c", S("ZQSAT"), [S("ZQSAT")], lambda q: _xp(q).minimum(0.5, q)),
+        comp("cor1", S("ZCOR"), [S("ZQSAT")], lambda q: 1.0 / (1.0 - RETV * q)),
+        comp("qs1m", S("ZQSAT"), [S("ZQSAT"), S("ZCOR")], lambda q, c: q * c),
+        comp(
+            "cond1",
+            S("ZCOND"),
+            [A("ZQSMIX"), S("ZQSAT"), S("ZCOR"), A("ZTP1")],
+            lambda qm, qs, cor, t: (qm - qs) / (1.0 + qs * cor * foedem(t)),
+        ),
+        comp("t1", A("ZTP1"), [A("ZTP1"), S("ZCOND")], lambda t, c: t + foeldcpm(t) * c),
+        comp("q1", A("ZQSMIX"), [A("ZQSMIX"), S("ZCOND")], lambda q, c: q - c),
+        # second saturation pass
+        comp("qs2", S("ZQSAT"), [A("ZTP1"), S("ZQP")], lambda t, qp: foeewm(t) * qp),
+        comp("qs2c", S("ZQSAT"), [S("ZQSAT")], lambda q: _xp(q).minimum(0.5, q)),
+        comp("cor2", S("ZCOR"), [S("ZQSAT")], lambda q: 1.0 / (1.0 - RETV * q)),
+        comp("qs2m", S("ZQSAT"), [S("ZQSAT"), S("ZCOR")], lambda q, c: q * c),
+        comp(
+            "cond2",
+            S("ZCOND1"),
+            [A("ZQSMIX"), S("ZQSAT"), S("ZCOR"), A("ZTP1")],
+            lambda qm, qs, cor, t: (qm - qs) / (1.0 + qs * cor * foedem(t)),
+        ),
+        comp("t2", A("ZTP1"), [A("ZTP1"), S("ZCOND1")], lambda t, c: t + foeldcpm(t) * c),
+        comp("q2", A("ZQSMIX"), [A("ZQSMIX"), S("ZCOND1")], lambda q, c: q - c),
+    )
+    nest = Loop("JK", klev, body=(Loop("JL", nproma, body=body),))
+    arrays = (
+        Array("PAP", (klev, nproma)),
+        Array("ZTP1", (klev, nproma)),
+        Array("ZQSMIX", (klev, nproma)),
+        Array("ZQP", ()),
+        Array("ZQSAT", ()),
+        Array("ZCOR", ()),
+        Array("ZCOND", ()),
+        Array("ZCOND1", ()),
+    )
+    return Program(name, arrays, (nest,),
+                   temps=("ZQP", "ZQSAT", "ZCOR", "ZCOND", "ZCOND1"))
+
+
+def physical_inputs(nproma: int = 128, klev: int = 137, seed: int = 0) -> dict[str, np.ndarray]:
+    """Physically plausible fields: T ~ 200-300K, p ~ 5e3-1e5 Pa, q ~ 0-0.02."""
+    rng = np.random.default_rng(seed)
+    return {
+        "PAP": rng.uniform(5e3, 1e5, size=(klev, nproma)),
+        "ZTP1": rng.uniform(200.0, 300.0, size=(klev, nproma)),
+        "ZQSMIX": rng.uniform(0.0, 0.02, size=(klev, nproma)),
+    }

@@ -1,0 +1,129 @@
+"""A mini CLOUDSC vertical scheme (paper §5.2 analogue).
+
+Several physics stages inside one vertical loop, modeled after the structure
+of the real scheme:
+
+  1. saturation/erosion update (the Fig. 10 nest, scalar chain over JL),
+  2. condensate source split into liquid/ice by the alpha weight,
+  3. precipitation flux accumulated *down the column* — a genuine JK-carried
+     recurrence (fluxes fall), which normalization must keep sequential,
+  4. final tendency update from the flux divergence.
+
+Stage 3 proves the normalizer's legality machinery on a real pattern: the
+JK-carried SCC stays atomic while every JL loop fissions and vectorizes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.ir import Affine, Array, Computation, Loop, Program, acc, aff
+from .erosion import _xp, foedem, foeewm, foeldcpm, RETV
+
+RG_DT = 0.75     # g*dt/dp surrogate
+RAUTO = 1.0e-3   # autoconversion rate
+RFALL = 0.8      # fall-speed weight
+
+
+def mini_cloudsc_program(nproma: int = 128, klev: int = 137) -> Program:
+    A = lambda n: acc(n, "JK", "JL")  # noqa: E731
+    Am1 = lambda n: acc(n, aff("JK", const=-1), "JL")  # noqa: E731
+    S = lambda n: acc(n)  # noqa: E731
+
+    def comp(nm, write, reads, expr, accumulate=None, guards=()):
+        return Computation(nm, write, tuple(reads), expr, accumulate, tuple(guards))
+
+    # -- stage 1: saturation adjustment (scalar chain, as in erosion) --------
+    sat = (
+        comp("zqp", S("ZQP"), [A("PAP")], lambda p: 1.0 / p),
+        comp("qs", S("ZQSAT"), [A("ZTP1"), S("ZQP")], lambda t, qp: foeewm(t) * qp),
+        comp("qsc", S("ZQSAT"), [S("ZQSAT")], lambda q: _xp(q).minimum(0.5, q)),
+        comp("cor", S("ZCOR"), [S("ZQSAT")], lambda q: 1.0 / (1.0 - RETV * q)),
+        comp("qsm", S("ZQSAT"), [S("ZQSAT"), S("ZCOR")], lambda q, c: q * c),
+        comp(
+            "cond",
+            S("ZCOND"),
+            [A("ZQSMIX"), S("ZQSAT"), S("ZCOR"), A("ZTP1")],
+            lambda qm, qs, cor, t: (qm - qs) / (1.0 + qs * cor * foedem(t)),
+        ),
+        comp("tu", A("ZTP1"), [A("ZTP1"), S("ZCOND")], lambda t, c: t + foeldcpm(t) * c),
+        comp("qu", A("ZQSMIX"), [A("ZQSMIX"), S("ZCOND")], lambda q, c: q - c),
+    )
+    # -- stage 2: split condensate into liquid & ice, autoconversion ---------
+    split = (
+        comp(
+            "liq",
+            A("ZQL"),
+            [A("ZQL"), A("ZQSMIX"), A("ZTP1")],
+            lambda ql, q, t: ql + RAUTO * q * foeldcpm(t) / (foeldcpm(t) + 1.0),
+        ),
+        comp(
+            "ice",
+            A("ZQI"),
+            [A("ZQI"), A("ZQSMIX"), A("ZTP1")],
+            lambda qi, q, t: qi + RAUTO * q * (1.0 - foeldcpm(t) / (foeldcpm(t) + 1.0)),
+        ),
+    )
+    # -- stage 3: precipitation flux falls down the column (JK-carried) ------
+    flux = (
+        comp(
+            "pfl",
+            A("PFPLSL"),
+            [Am1("PFPLSL"), A("ZQL")],
+            lambda fup, ql: RFALL * fup + RAUTO * ql,
+            guards=(aff("JK", const=-1),),  # JK >= 1 (no level above at JK=0)
+        ),
+        comp(
+            "pfl0",
+            A("PFPLSL"),
+            [A("ZQL")],
+            lambda ql: RAUTO * ql,
+            guards=(aff(("JK", -1)),),  # JK == 0  (−JK >= 0)
+        ),
+    )
+    # -- stage 4: tendency from flux divergence ------------------------------
+    tend = (
+        comp(
+            "dq",
+            A("TENDQ"),
+            [A("PFPLSL"), A("ZQSMIX")],
+            lambda f, q: RG_DT * (q - f),
+        ),
+    )
+    nest = Loop(
+        "JK",
+        klev,
+        body=(
+            Loop("JL", nproma, body=sat),
+            Loop("JL2", nproma, body=tuple(c.rename({"JL": "JL2"}) for c in split)),
+            Loop("JL3", nproma, body=tuple(c.rename({"JL": "JL3"}) for c in flux)),
+            Loop("JL4", nproma, body=tuple(c.rename({"JL": "JL4"}) for c in tend)),
+        ),
+    )
+    arrays = (
+        Array("PAP", (klev, nproma)),
+        Array("ZTP1", (klev, nproma)),
+        Array("ZQSMIX", (klev, nproma)),
+        Array("ZQL", (klev, nproma)),
+        Array("ZQI", (klev, nproma)),
+        Array("PFPLSL", (klev, nproma)),
+        Array("TENDQ", (klev, nproma)),
+        Array("ZQP", ()),
+        Array("ZQSAT", ()),
+        Array("ZCOR", ()),
+        Array("ZCOND", ()),
+    )
+    return Program(
+        "mini_cloudsc", arrays, (nest,),
+        temps=("ZQP", "ZQSAT", "ZCOR", "ZCOND", "PFPLSL", "TENDQ"),
+    )
+
+
+def scheme_inputs(nproma: int = 128, klev: int = 137, seed: int = 0) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    return {
+        "PAP": rng.uniform(5e3, 1e5, size=(klev, nproma)),
+        "ZTP1": rng.uniform(200.0, 300.0, size=(klev, nproma)),
+        "ZQSMIX": rng.uniform(0.0, 0.02, size=(klev, nproma)),
+        "ZQL": rng.uniform(0.0, 1e-3, size=(klev, nproma)),
+        "ZQI": rng.uniform(0.0, 1e-3, size=(klev, nproma)),
+    }

@@ -1,0 +1,24 @@
+"""repro.core — a priori loop nest normalization + the daisy auto-scheduler.
+
+Public API:
+    ir          — the affine loop-nest IR (Program/Loop/Computation/Access)
+    normalize   — maximal loop fission + stride minimization (paper §2)
+    codegen     — executable lowerings (numpy oracle, as-written, canonical)
+    scheduler   — Daisy: normalize -> idioms -> transfer-tune -> compile
+"""
+from .ir import (  # noqa: F401
+    Access,
+    Affine,
+    Array,
+    Computation,
+    Loop,
+    Program,
+    acc,
+    aff,
+    fingerprint,
+)
+from .normalize import maximal_fission, normalize, stride_minimization  # noqa: F401
+from .codegen import Schedule, compile_jax, execute_numpy, run_jax  # noqa: F401
+from .database import TuningDatabase  # noqa: F401
+from .recipes import Recipe  # noqa: F401
+from .scheduler import Daisy, random_inputs  # noqa: F401

@@ -1,0 +1,528 @@
+"""Code generation: loop-nest IR -> executable code.
+
+Three lowerings:
+
+* ``execute_numpy``  — the semantic oracle: literal nested Python loops over
+  numpy arrays.  Slow; used by tests to validate every other path.
+* ``compile_jax(mode='as_written')`` — the *baseline compiler* analogue: the
+  nest is lowered in its authored loop order; only each computation's
+  innermost legal loop is vectorized (what ``clang -O3``'s auto-vectorizer
+  sees), everything else becomes sequential ``lax.fori_loop``s.  No idioms.
+* ``compile_jax(mode='canonical')`` — the scheduled path: every legal
+  iterator is vectorized (subject to a materialization budget), reductions
+  become vector reductions, and BLAS-class computations are dispatched to
+  ``jnp.einsum`` / Pallas (idiom detection), mirroring the paper's recipe DB.
+
+Legality is decided with the same dependence machinery the normalizer uses:
+an iterator may be materialized as an array axis iff no dependence of the
+nest is carried by it (reduction self-deps of flagged accumulations exempt).
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Mapping, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .dependence import EQ, nest_direction_vectors
+from .ir import (
+    Access,
+    Affine,
+    Array,
+    Computation,
+    Loop,
+    Node,
+    Program,
+    loop_iterators,
+    nest_computations,
+    walk,
+)
+
+_ACC_INIT = {"+": 0.0, "*": 1.0, "max": -np.inf, "min": np.inf}
+
+
+# ---------------------------------------------------------------------------
+# Oracle: literal numpy interpreter
+# ---------------------------------------------------------------------------
+def execute_numpy(program: Program, inputs: Mapping[str, np.ndarray]) -> dict[str, np.ndarray]:
+    env = {
+        a.name: (
+            np.zeros(a.shape, dtype=np.float64)
+            if a.name in program.temps
+            else np.array(inputs[a.name], dtype=np.float64, copy=True)
+        )
+        for a in program.arrays
+    }
+
+    def eval_aff(a: Affine, it_env: dict[str, int]) -> int:
+        return a.const + sum(c * it_env[k] for k, c in a.coeffs)
+
+    def run(node: Node, it_env: dict[str, int]) -> None:
+        if isinstance(node, Computation):
+            if any(eval_aff(g, it_env) < 0 for g in node.guards):
+                return
+            vals = []
+            for r in node.reads:
+                ix = tuple(eval_aff(e, it_env) for e in r.index)
+                vals.append(env[r.array][ix] if ix else env[r.array][()])
+            out = node.expr(*vals)
+            wix = tuple(eval_aff(e, it_env) for e in node.write.index)
+            tgt = env[node.write.array]
+            if node.accumulate is None:
+                tgt[wix] = out
+            elif node.accumulate == "+":
+                tgt[wix] += out
+            elif node.accumulate == "*":
+                tgt[wix] *= out
+            elif node.accumulate == "max":
+                tgt[wix] = max(tgt[wix], out)
+            elif node.accumulate == "min":
+                tgt[wix] = min(tgt[wix], out)
+            else:
+                raise ValueError(node.accumulate)
+        else:
+            for v in range(node.start, node.stop, node.step):
+                it_env[node.iterator] = v
+                for child in node.body:
+                    run(child, it_env)
+            it_env.pop(node.iterator, None)
+
+    for n in program.body:
+        run(n, {})
+    return env
+
+
+# ---------------------------------------------------------------------------
+# JAX backend
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Schedule:
+    """Scheduling decisions for ``compile_jax`` (one per program)."""
+
+    mode: str = "canonical"  # 'as_written' | 'canonical'
+    use_idioms: bool = True  # BLAS-class dispatch (einsum / Pallas)
+    vec_budget: int = 1 << 22  # max materialized elements per computation
+    pallas_gemm: bool = False  # route GEMM idiom to the Pallas kernel
+    tile: tuple[int, int, int] | None = None  # Pallas GEMM block sizes
+    interpret: bool = True  # Pallas interpret mode (CPU container)
+
+
+@dataclass
+class _VecAxis:
+    iterator: str
+    start: int
+    stop: int
+    step: int
+
+    @property
+    def trip(self) -> int:
+        return max(0, (self.stop - self.start + self.step - 1) // self.step)
+
+
+class Unsupported(Exception):
+    pass
+
+
+def _written_arrays(node: Node) -> list[str]:
+    if isinstance(node, Computation):
+        return [node.write.array]
+    out: list[str] = []
+    for _, c in walk(node):
+        if c.write.array not in out:
+            out.append(c.write.array)
+    return out
+
+
+def _is_multiplicative(expr: Callable, n_reads: int) -> float | None:
+    """Probe: does ``expr(*xs) == c * prod(xs)``? Return c, else None."""
+    if n_reads == 0:
+        return None
+    rng = np.random.default_rng(0)
+    try:
+        c = float(expr(*([np.float64(1.0)] * n_reads)))
+    except Exception:
+        return None
+    if not np.isfinite(c) or c == 0.0:
+        return None
+    for _ in range(3):
+        xs = rng.uniform(0.5, 2.0, size=n_reads)
+        try:
+            got = float(expr(*[np.float64(x) for x in xs]))
+        except Exception:
+            return None
+        want = c * float(np.prod(xs))
+        if not np.isclose(got, want, rtol=1e-10, atol=1e-12):
+            return None
+    return c
+
+
+def _single_iter_dims(a: Access) -> list[str] | None:
+    """If every dim of ``a`` is exactly one iterator (coeff 1, const 0), return
+    the iterator per dim; else None."""
+    out = []
+    for ix in a.index:
+        if ix.const != 0 or len(ix.coeffs) != 1 or ix.coeffs[0][1] != 1:
+            return None
+        out.append(ix.coeffs[0][0])
+    return out
+
+
+class _NestEmitter:
+    """Emits one top-level nest into JAX, structure-driven."""
+
+    def __init__(self, program: Program, schedule: Schedule):
+        self.p = program
+        self.s = schedule
+
+    # -- planning -----------------------------------------------------------
+    def plan(self, nest: Node) -> dict[str, bool]:
+        """iterator -> vectorizable? (plus budget-driven demotion).
+
+        Legality is *per loop over its own subtree*: a loop may be
+        materialized as an array axis iff no dependence among the
+        computations it encloses is carried by its iterator.  Dependences
+        between sibling nests are enforced by their sequential emission
+        order and do not constrain vectorization.
+        """
+        if isinstance(nest, Computation):
+            return {}
+        iterators = list(loop_iterators(nest))
+        legal: dict[str, bool] = {}
+
+        def visit(n: Node) -> None:
+            if isinstance(n, Computation):
+                return
+            comps = nest_computations(n)
+            vecs = nest_direction_vectors([n.iterator], {n.iterator: n.trip_count}, comps)
+            legal[n.iterator] = all(v.directions[0] == EQ for v in vecs)
+            for b in n.body:
+                visit(b)
+
+        visit(nest)
+        if self.s.mode == "as_written":
+            # only each computation's innermost enclosing loop is vectorized
+            inner: set[str] = set()
+            for loops, _ in walk(nest):
+                if loops:
+                    inner.add(loops[-1].iterator)
+            return {it: (legal[it] and it in inner) for it in iterators}
+        # canonical: vectorize all legal iterators within the budget,
+        # demoting from the *outermost* side (keeps inner/fast axes wide).
+        vec = {it: legal[it] for it in iterators}
+        for loops, comp in walk(nest):
+            used = [l for l in loops if vec.get(l.iterator)]
+            prod = math.prod(max(1, l.trip_count) for l in used)
+            for l in used:  # outermost first
+                if prod <= self.s.vec_budget:
+                    break
+                vec[l.iterator] = False
+                prod //= max(1, l.trip_count)
+        return vec
+
+    def _trips(self, nest: Node) -> dict[str, int]:
+        out: dict[str, int] = {}
+
+        def rec(n: Node) -> None:
+            if isinstance(n, Loop):
+                out[n.iterator] = n.trip_count
+                for b in n.body:
+                    rec(b)
+
+        rec(nest)
+        return out
+
+    # -- emission -----------------------------------------------------------
+    def emit(self, nest: Node, env: dict[str, jnp.ndarray]) -> dict[str, jnp.ndarray]:
+        self.vec_plan = self.plan(nest)
+        return self._emit(nest, env, {}, [])
+
+    def _emit(
+        self,
+        node: Node,
+        env: dict[str, jnp.ndarray],
+        seq_env: dict[str, Any],
+        vec_axes: list[_VecAxis],
+    ) -> dict[str, jnp.ndarray]:
+        if isinstance(node, Computation):
+            return self._emit_comp(node, env, seq_env, vec_axes)
+        if self.vec_plan.get(node.iterator, False):
+            vec2 = vec_axes + [_VecAxis(node.iterator, node.start, node.stop, node.step)]
+            for child in node.body:
+                env = self._emit(child, env, seq_env, vec2)
+            return env
+        # sequential loop -> lax.fori_loop carrying the written arrays
+        carried = _written_arrays(node)
+        if node.trip_count <= 0:
+            return env
+
+        def body(k, carry):
+            e = dict(env)
+            e.update(dict(zip(carried, carry)))
+            s2 = dict(seq_env)
+            s2[node.iterator] = node.start + k * node.step
+            for child in node.body:
+                e = self._emit(child, e, s2, vec_axes)
+            return tuple(e[a] for a in carried)
+
+        out = lax.fori_loop(0, node.trip_count, body, tuple(env[a] for a in carried))
+        env = dict(env)
+        env.update(dict(zip(carried, out)))
+        return env
+
+    # -- computation emission -----------------------------------------------
+    def _axes_for(self, comp: Computation, vec_axes: list[_VecAxis]) -> list[_VecAxis]:
+        used = set(comp.iterators())
+        return [a for a in vec_axes if a.iterator in used]
+
+    def _iter_value(self, it: str, axes: list[_VecAxis], seq_env: dict[str, Any]):
+        for pos, a in enumerate(axes):
+            if a.iterator == it:
+                r = a.start + a.step * jnp.arange(a.trip, dtype=jnp.int32)
+                shape = [1] * len(axes)
+                shape[pos] = a.trip
+                return r.reshape(shape)
+        if it in seq_env:
+            return seq_env[it]
+        raise Unsupported(f"iterator {it} not bound")
+
+    def _eval_affine(self, e: Affine, axes: list[_VecAxis], seq_env: dict[str, Any]):
+        val = e.const
+        for it, c in e.coeffs:
+            val = val + c * self._iter_value(it, axes, seq_env)
+        return val
+
+    def _gather(self, a: Access, env, axes, seq_env):
+        arr = env[a.array]
+        if not a.index:
+            return arr
+        idx = tuple(self._eval_affine(ix, axes, seq_env) for ix in a.index)
+        if all(np.isscalar(i) or (hasattr(i, "ndim") and i.ndim == 0) for i in idx):
+            return arr[idx]
+        # broadcast scalar dims to arrays for advanced indexing
+        shape = jnp.broadcast_shapes(*[jnp.shape(i) for i in idx if hasattr(i, "shape")] or [()])
+        idx = tuple(jnp.broadcast_to(jnp.asarray(i, jnp.int32), shape) for i in idx)
+        return arr[idx]
+
+    def _emit_comp(self, comp, env, seq_env, vec_axes):
+        axes = self._axes_for(comp, vec_axes)
+        if self.s.use_idioms:
+            out = self._try_einsum(comp, env, seq_env, axes)
+            if out is not None:
+                env = dict(env)
+                env[comp.write.array] = out
+                return env
+        vals = comp.expr(*[self._gather(r, env, axes, seq_env) for r in comp.reads])
+        full_shape = tuple(a.trip for a in axes)
+        vals = jnp.broadcast_to(vals, jnp.broadcast_shapes(jnp.shape(vals), full_shape))
+
+        mask = None
+        for g in comp.guards:
+            gv = self._eval_affine(g, axes, seq_env)
+            m = jnp.broadcast_to(jnp.asarray(gv) >= 0, full_shape)
+            mask = m if mask is None else (mask & m)
+
+        # split axes into write (kept) vs reduction (folded)
+        w_its = set(it for ix in comp.write.index for it in ix.iterators())
+        keep = [k for k, a in enumerate(axes) if a.iterator in w_its]
+        red = [k for k, a in enumerate(axes) if a.iterator not in w_its]
+        acc = comp.accumulate
+        if red and acc is None:
+            raise Unsupported(f"{comp.name}: assignment under reduction axes")
+        if mask is not None and acc is not None:
+            fill = _ACC_INIT[acc]
+            vals = jnp.where(mask, vals, fill)
+        if red:
+            redfn = {"+": jnp.sum, "*": jnp.prod, "max": jnp.max, "min": jnp.min}[acc]
+            vals = redfn(vals, axis=tuple(red))
+        kept_axes = [axes[k] for k in keep]
+
+        arr = env[comp.write.array]
+        env = dict(env)
+        if not comp.write.index:  # scalar (0-d) target
+            if acc is None:
+                new = jnp.where(mask, vals, arr) if mask is not None else vals
+            else:
+                new = _combine(acc, arr, vals)
+            env[comp.write.array] = new.astype(arr.dtype)
+            return env
+
+        # fast path: write map is a permutation of kept axes covering the array
+        # (for accumulates, any mask was already folded into neutral fills)
+        fast = self._fast_write(comp, kept_axes, arr)
+        if fast is not None:
+            perm = fast
+            vt = jnp.transpose(vals, perm) if perm != tuple(range(vals.ndim)) else vals
+            if acc is None:
+                if mask is not None:
+                    mt = jnp.transpose(mask, perm) if perm != tuple(range(mask.ndim)) else mask
+                    # mask covers only kept axes here (no reduction with set)
+                    vt = jnp.where(mt, vt, arr)
+                env[comp.write.array] = vt.astype(arr.dtype)
+            else:
+                env[comp.write.array] = _combine(acc, arr, vt).astype(arr.dtype)
+            return env
+
+        widx = tuple(
+            jnp.broadcast_to(
+                jnp.asarray(self._eval_affine(ix, kept_axes, seq_env), jnp.int32),
+                tuple(a.trip for a in kept_axes),
+            )
+            for ix in comp.write.index
+        )
+        if acc is None:
+            if mask is not None:
+                # set-writes have no reduction axes, so mask is over kept axes
+                cur = arr[widx]
+                vals = jnp.where(mask, vals, cur)
+            env[comp.write.array] = arr.at[widx].set(vals.astype(arr.dtype))
+        else:
+            upd = getattr(arr.at[widx], {"+": "add", "*": "multiply", "max": "max", "min": "min"}[acc])
+            env[comp.write.array] = upd(vals.astype(arr.dtype))
+        return env
+
+    def _fast_write(self, comp, kept_axes, arr):
+        """Return transpose perm if the write map is a full-cover permutation
+        of the kept vectorized axes (identity scatter)."""
+        its = _single_iter_dims(comp.write)
+        if its is None or len(its) != arr.ndim:
+            return None
+        axis_of = {a.iterator: k for k, a in enumerate(kept_axes)}
+        if set(its) != set(axis_of) or len(set(its)) != len(its):
+            return None
+        for d, it in enumerate(its):
+            a = kept_axes[axis_of[it]]
+            if not (a.start == 0 and a.step == 1 and a.stop == arr.shape[d] == a.trip):
+                return None
+        return tuple(axis_of[it] for it in its)
+
+    # -- BLAS idiom: einsum / Pallas GEMM ------------------------------------
+    def _try_einsum(self, comp, env, seq_env, axes):
+        if comp.accumulate != "+" or comp.guards or len(comp.reads) < 1:
+            return None
+        c = _is_multiplicative(comp.expr, len(comp.reads))
+        if c is None:
+            return None
+        ax_of = {a.iterator: a for a in axes}
+        # every iterator of the computation must be a vectorized full-range axis
+        for it in comp.iterators():
+            a = ax_of.get(it)
+            if a is None or a.start != 0 or a.step != 1:
+                return None
+        # accesses: dims are single iterators (full range) or seq-env scalars
+        def classify(a: Access):
+            letters, slicers = [], []
+            arr = env[a.array]
+            for d, ix in enumerate(a.index):
+                its = ix.iterators()
+                if len(its) == 1 and ix.const == 0 and ix.coeff(its[0]) == 1 and its[0] in ax_of:
+                    if ax_of[its[0]].trip != arr.shape[d]:
+                        return None
+                    letters.append(its[0])
+                    slicers.append(None)
+                elif not its or all(it in seq_env for it in its):
+                    slicers.append(self._eval_affine(ix, [], seq_env))
+                    letters.append(None)
+                else:
+                    return None
+            return letters, slicers
+
+        w = classify(comp.write)
+        if w is None or any(l is None for l in w[0]):
+            return None
+        rs = [classify(r) for r in comp.reads]
+        if any(r is None for r in rs):
+            return None
+
+        sym: dict[str, str] = {}
+
+        def letter(it: str) -> str:
+            if it not in sym:
+                sym[it] = "abcdefghijklmnopqrstuvwxyz"[len(sym)]
+            return sym[it]
+
+        operands, subs = [], []
+        for (letters, slicers), acc_r in zip(rs, comp.reads):
+            arr = env[acc_r.array]
+            sub = ""
+            for d in range(len(letters) - 1, -1, -1):
+                if letters[d] is None:
+                    arr = jnp.take(arr, jnp.asarray(slicers[d], jnp.int32), axis=d)
+            for d, l in enumerate(letters):
+                if l is not None:
+                    sub += letter(l)
+            operands.append(arr)
+            subs.append(sub)
+        out_sub = "".join(letter(l) for l in w[0])
+        for l in out_sub:
+            if not any(l in s for s in subs):
+                return None  # output iterator never read: einsum can't broadcast it
+        arr = env[comp.write.array]
+        if tuple(ax_of[l].trip for l in w[0]) != arr.shape:
+            return None  # partial-cover writes take the generic path
+        contrib = None
+        if self.s.pallas_gemm and len(operands) == 2:
+            # canonical 2-operand contraction -> Pallas MXU kernel
+            try:
+                from ..kernels import ops as kops
+
+                contrib = kops.einsum2(
+                    subs[0], subs[1], out_sub, operands[0], operands[1],
+                    tile=self.s.tile, interpret=self.s.interpret,
+                )
+            except Exception:
+                contrib = None
+        if contrib is None:
+            spec = ",".join(subs) + "->" + out_sub
+            contrib = jnp.einsum(spec, *operands)
+        if c != 1.0:
+            contrib = contrib * c
+        return arr + contrib.astype(arr.dtype)
+
+
+def _combine(acc: str, a, b):
+    return {"+": lambda: a + b, "*": lambda: a * b,
+            "max": lambda: jnp.maximum(a, b), "min": lambda: jnp.minimum(a, b)}[acc]()
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+def compile_jax(
+    program: Program,
+    schedule: Schedule,
+    per_nest: Sequence[Schedule] | None = None,
+) -> Callable[[Mapping[str, Any]], dict[str, Any]]:
+    """Build a jit-able fn: {array: value} -> {array: value} (updated).
+
+    ``per_nest`` optionally overrides the schedule for each top-level nest
+    (the daisy scheduler resolves one recipe per canonical nest).
+    """
+    if per_nest is not None:
+        assert len(per_nest) == len(program.body)
+
+    def fn(inputs: Mapping[str, Any]) -> dict[str, Any]:
+        env = {
+            a.name: (
+                jnp.zeros(a.shape, dtype=jnp.float32)
+                if a.name in program.temps
+                else jnp.asarray(inputs[a.name])
+            )
+            for a in program.arrays
+        }
+        for k, nest in enumerate(program.body):
+            em = _NestEmitter(program, per_nest[k] if per_nest else schedule)
+            env = em.emit(nest, env)
+        return env
+
+    return fn
+
+
+def run_jax(program: Program, inputs: Mapping[str, Any], schedule: Schedule | None = None):
+    sched = schedule or Schedule()
+    return jax.jit(compile_jax(program, sched))(dict(inputs))

@@ -1,0 +1,94 @@
+"""Transfer-tuning database (paper §4): canonical nest -> recipe.
+
+Lookup order mirrors the paper exactly:
+ 1. exact fingerprint match ("if a B loop nest is reduced to an A loop nest")
+ 2. nearest neighbour by Euclidean distance on the performance embedding
+    (within ``radius``); the recipe of the most similar nest transfers.
+ 3. miss -> the caller falls back to the default recipe.
+
+The database is JSON-persistable so seeded schedules ship with the framework.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+
+import numpy as np
+
+from .embedding import distance
+from .recipes import Recipe
+
+
+@dataclass
+class Entry:
+    fingerprint: str
+    embedding: np.ndarray
+    recipe: Recipe
+    provenance: str = ""
+    measured_us: float | None = None
+
+
+@dataclass
+class TuningDatabase:
+    entries: list[Entry] = field(default_factory=list)
+    radius: float = 6.0
+
+    def add(self, fingerprint: str, embedding: np.ndarray, recipe: Recipe,
+            provenance: str = "", measured_us: float | None = None) -> None:
+        for e in self.entries:
+            if e.fingerprint == fingerprint:
+                # keep the better-measured recipe
+                if measured_us is not None and (e.measured_us is None or measured_us < e.measured_us):
+                    e.recipe, e.measured_us, e.provenance = recipe, measured_us, provenance
+                return
+        self.entries.append(Entry(fingerprint, np.asarray(embedding, dtype=np.float64),
+                                  recipe, provenance, measured_us))
+
+    def lookup_exact(self, fingerprint: str) -> Recipe | None:
+        for e in self.entries:
+            if e.fingerprint == fingerprint:
+                return e.recipe
+        return None
+
+    def lookup_nearest(self, embedding: np.ndarray, k: int = 1) -> list[tuple[float, Entry]]:
+        scored = sorted(
+            ((distance(embedding, e.embedding), e) for e in self.entries),
+            key=lambda t: t[0],
+        )
+        return [s for s in scored[:k] if s[0] <= self.radius]
+
+    def lookup(self, fingerprint: str, embedding: np.ndarray) -> tuple[Recipe | None, str]:
+        r = self.lookup_exact(fingerprint)
+        if r is not None:
+            return r, "exact"
+        near = self.lookup_nearest(embedding)
+        if near:
+            return near[0][1].recipe, f"transfer(d={near[0][0]:.2f})"
+        return None, "miss"
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path: str | Path) -> None:
+        data = [
+            {
+                "fingerprint": e.fingerprint,
+                "embedding": e.embedding.tolist(),
+                "recipe": e.recipe.to_json(),
+                "provenance": e.provenance,
+                "measured_us": e.measured_us,
+            }
+            for e in self.entries
+        ]
+        Path(path).write_text(json.dumps({"radius": self.radius, "entries": data}, indent=1))
+
+    @staticmethod
+    def load(path: str | Path) -> "TuningDatabase":
+        raw = json.loads(Path(path).read_text())
+        db = TuningDatabase(radius=raw.get("radius", 6.0))
+        for d in raw["entries"]:
+            db.entries.append(
+                Entry(d["fingerprint"], np.asarray(d["embedding"]),
+                      Recipe.from_json(d["recipe"]), d.get("provenance", ""),
+                      d.get("measured_us"))
+            )
+        return db

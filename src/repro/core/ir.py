@@ -1,0 +1,321 @@
+"""Affine loop-nest IR — the substrate for a priori loop nest normalization.
+
+The paper (Trümper et al., CGO'25) defines:
+  * Computation — unit of work with exactly one write of a scalar to a container.
+  * Loop — iterator, bounds, step, and a body of computations/loops.
+  * Loop nest — tree of loops and computations (Fig. 2).
+
+This module is a faithful, symbolic encoding of those definitions.  Index
+expressions are affine maps over the enclosing iterators, which is what the
+paper's Polly-based lifting produces for the benchmarks it handles; non-affine
+accesses are representable (coefficient on the special iterator ``"*"``) and
+deliberately block normalization, modeling the paper's lifting failures
+(correlation/covariance in §4.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+import numpy as np
+
+NONAFFINE = "*"  # marker iterator for non-affine index terms
+
+
+# ---------------------------------------------------------------------------
+# Affine expressions
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Affine:
+    """``sum(coeffs[it] * it) + const`` over iterator names."""
+
+    coeffs: tuple[tuple[str, int], ...] = ()
+    const: int = 0
+
+    @staticmethod
+    def of(*terms: tuple[str, int] | str, const: int = 0) -> "Affine":
+        cs: dict[str, int] = {}
+        for t in terms:
+            name, c = (t, 1) if isinstance(t, str) else t
+            cs[name] = cs.get(name, 0) + c
+        return Affine(tuple(sorted((k, v) for k, v in cs.items() if v != 0)), const)
+
+    def coeff(self, it: str) -> int:
+        for k, v in self.coeffs:
+            if k == it:
+                return v
+        return 0
+
+    @property
+    def is_affine(self) -> bool:
+        return self.coeff(NONAFFINE) == 0
+
+    def iterators(self) -> tuple[str, ...]:
+        return tuple(k for k, _ in self.coeffs if k != NONAFFINE)
+
+    def rename(self, mapping: Mapping[str, str]) -> "Affine":
+        return Affine(
+            tuple(sorted((mapping.get(k, k), v) for k, v in self.coeffs)), self.const
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        parts = [f"{v}*{k}" if v != 1 else k for k, v in self.coeffs]
+        if self.const or not parts:
+            parts.append(str(self.const))
+        return "+".join(parts)
+
+
+def aff(*terms, const: int = 0) -> Affine:
+    """Shorthand: aff('i'), aff(('i',2),'j',const=1)."""
+    return Affine.of(*terms, const=const)
+
+
+# ---------------------------------------------------------------------------
+# Data containers and accesses
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Array:
+    """A data container with a row-major layout (strides derived from shape)."""
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: str = "float32"
+
+    @property
+    def strides(self) -> tuple[int, ...]:
+        s = [1] * len(self.shape)
+        for d in range(len(self.shape) - 2, -1, -1):
+            s[d] = s[d + 1] * self.shape[d + 1]
+        return tuple(s)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+@dataclass(frozen=True)
+class Access:
+    """An affine access ``array[index_0, ..., index_{r-1}]``."""
+
+    array: str
+    index: tuple[Affine, ...]
+
+    @property
+    def is_affine(self) -> bool:
+        return all(ix.is_affine for ix in self.index)
+
+    def iterators(self) -> tuple[str, ...]:
+        seen: list[str] = []
+        for ix in self.index:
+            for it in ix.iterators():
+                if it not in seen:
+                    seen.append(it)
+        return tuple(seen)
+
+    def rename(self, mapping: Mapping[str, str]) -> "Access":
+        return Access(self.array, tuple(ix.rename(mapping) for ix in self.index))
+
+
+def acc(array: str, *index) -> Access:
+    """Shorthand: acc('A','i','k'), acc('C','i',aff('j',const=1))."""
+    ix = tuple(x if isinstance(x, Affine) else aff(x) for x in index)
+    return Access(array, ix)
+
+
+# ---------------------------------------------------------------------------
+# Computations and loops
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Computation:
+    """One statement: ``write op= expr(*reads)``.
+
+    ``expr`` is an opaque scalar function (jnp-traceable) of the read values —
+    the IR reasons only about the access structure, exactly like the paper's
+    symbolic representation. ``accumulate`` marks reduction writes
+    (``'+'``, ``'max'``, ``'min'``, ``'*'``) vs plain assignment (None).
+
+    ``guards`` are affine inequalities ``g(iters) >= 0`` restricting the
+    iteration domain — triangular PolyBench domains are represented as a
+    rectangular box plus guards (the isl-domain flattened), which keeps loop
+    bounds static while preserving semantics.
+    """
+
+    name: str
+    write: Access
+    reads: tuple[Access, ...]
+    expr: Callable[..., Any]
+    accumulate: str | None = None
+    guards: tuple[Affine, ...] = ()
+
+    def accesses(self) -> tuple[Access, ...]:
+        return (self.write,) + self.reads
+
+    def iterators(self) -> tuple[str, ...]:
+        seen: list[str] = []
+        for a in self.accesses():
+            for it in a.iterators():
+                if it not in seen:
+                    seen.append(it)
+        for g in self.guards:
+            for it in g.iterators():
+                if it not in seen:
+                    seen.append(it)
+        return tuple(seen)
+
+    def rename(self, mapping: Mapping[str, str]) -> "Computation":
+        return replace(
+            self,
+            write=self.write.rename(mapping),
+            reads=tuple(r.rename(mapping) for r in self.reads),
+            guards=tuple(g.rename(mapping) for g in self.guards),
+        )
+
+
+@dataclass(frozen=True)
+class Loop:
+    """``for it in range(start, stop, step): body``  (bounds are static ints)."""
+
+    iterator: str
+    stop: int
+    start: int = 0
+    step: int = 1
+    body: tuple["Node", ...] = ()
+
+    @property
+    def trip_count(self) -> int:
+        return max(0, (self.stop - self.start + self.step - 1) // self.step)
+
+    def rename(self, mapping: Mapping[str, str]) -> "Loop":
+        return replace(
+            self,
+            iterator=mapping.get(self.iterator, self.iterator),
+            body=tuple(b.rename(mapping) for b in self.body),
+        )
+
+
+Node = Loop | Computation
+
+
+@dataclass(frozen=True)
+class Program:
+    """An ordered sequence of loops/computations plus array declarations.
+
+    ``temps`` names scratch containers: they are zero-initialized by the
+    runtime rather than supplied as inputs, and normalization (e.g. scalar
+    expansion) may freely change their shapes.
+    """
+
+    name: str
+    arrays: tuple[Array, ...]
+    body: tuple[Node, ...]
+    temps: tuple[str, ...] = ()
+
+    def array(self, name: str) -> Array:
+        for a in self.arrays:
+            if a.name == name:
+                return a
+        raise KeyError(name)
+
+    @property
+    def array_names(self) -> tuple[str, ...]:
+        return tuple(a.name for a in self.arrays)
+
+    @property
+    def input_arrays(self) -> tuple[Array, ...]:
+        return tuple(a for a in self.arrays if a.name not in self.temps)
+
+
+# ---------------------------------------------------------------------------
+# Tree utilities
+# ---------------------------------------------------------------------------
+def walk(node: Node, prefix: tuple[Loop, ...] = ()) -> Iterable[tuple[tuple[Loop, ...], Computation]]:
+    """Yield (enclosing loops, computation) for every computation under node."""
+    if isinstance(node, Computation):
+        yield prefix, node
+    else:
+        for child in node.body:
+            yield from walk(child, prefix + (node,))
+
+
+def program_computations(p: Program) -> list[tuple[tuple[Loop, ...], Computation]]:
+    out: list[tuple[tuple[Loop, ...], Computation]] = []
+    for n in p.body:
+        out.extend(walk(n))
+    return out
+
+
+def loop_iterators(node: Node) -> tuple[str, ...]:
+    """In-order iterator names of a nest (paper's loop -> (i_1..i_n) notation)."""
+    if isinstance(node, Computation):
+        return ()
+    its = (node.iterator,)
+    for child in node.body:
+        for it in loop_iterators(child):
+            if it not in its:
+                its = its + (it,)
+    return its
+
+
+def is_perfect_nest(node: Node) -> bool:
+    """True if node is a chain of single-child loops ending in computations."""
+    while isinstance(node, Loop):
+        kids = node.body
+        if all(isinstance(k, Computation) for k in kids):
+            return True
+        if len(kids) != 1:
+            return False
+        node = kids[0]
+    return True
+
+
+def nest_computations(node: Node) -> list[Computation]:
+    return [c for _, c in walk(node)] if isinstance(node, Loop) else [node]
+
+
+def nest_loops(node: Node) -> list[Loop]:
+    """The chain of loops from the root of a (quasi-)perfect nest."""
+    out: list[Loop] = []
+    while isinstance(node, Loop):
+        out.append(node)
+        loops = [k for k in node.body if isinstance(k, Loop)]
+        if len(loops) == 1 and len(node.body) == 1:
+            node = loops[0]
+        else:
+            break
+    return out
+
+
+def rename_nest(node: Node, suffix: str) -> Node:
+    """Clone a nest with fresh iterator names (paper §2.1: i'_1 = i_1, ...)."""
+    its = loop_iterators(node) if isinstance(node, Loop) else ()
+    mapping = {it: f"{it}{suffix}" for it in its}
+    return node.rename(mapping)
+
+
+def fingerprint(node: Node) -> str:
+    """Structural fingerprint of a nest, invariant to iterator names.
+
+    Canonical iterator names are assigned by in-order traversal position so two
+    nests that differ only in naming hash identically — this is the key the
+    transfer-tuning database ultimately relies on.
+    """
+    its = loop_iterators(node) if isinstance(node, Loop) else ()
+    mapping = {it: f"t{k}" for k, it in enumerate(its)}
+
+    def fmt_aff(a: Affine) -> str:
+        return repr(a.rename(mapping))
+
+    def fmt_acc(a: Access) -> str:
+        return f"{a.array}[{','.join(fmt_aff(ix) for ix in a.index)}]"
+
+    def fmt(n: Node) -> str:
+        if isinstance(n, Computation):
+            rd = ";".join(fmt_acc(r) for r in n.reads)
+            gd = ";".join(fmt_aff(g) for g in n.guards)
+            return f"C({fmt_acc(n.write)}{n.accumulate or '='}{rd}|{gd})"
+        inner = ",".join(fmt(b) for b in n.body)
+        return f"L[{mapping.get(n.iterator, n.iterator)}:{n.start}:{n.stop}:{n.step}]({inner})"
+
+    return fmt(node)

@@ -1,0 +1,59 @@
+"""Optimization recipes — what the transfer-tuning database stores per nest.
+
+A recipe is the downstream half of the paper's pipeline: after normalization
+maps a nest to canonical form, the recipe says how to lower it.  Recipes are
+deliberately small — that is the point of the paper: normalization collapses
+the input space so a handful of recipes covers many programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any
+
+
+@dataclass(frozen=True)
+class Recipe:
+    """Lowering decisions for one canonical nest.
+
+    kind:
+      'einsum'       — BLAS-class idiom: dispatch to jnp.einsum (library call)
+      'pallas_gemm'  — same idiom, routed to the Pallas MXU kernel (TPU path)
+      'vectorize'    — generic vectorized lowering of all legal iterators
+      'sequential'   — keep sequential loops (recurrences; the safe fallback)
+    """
+
+    kind: str = "vectorize"
+    vec_budget: int = 1 << 22          # materialization budget (elements)
+    tile: tuple[int, int, int] | None = None   # Pallas (bm, bn, bk)
+    parallelize: str | None = None     # mesh axis for the outer parallel loop
+    unroll: int = 1                    # reduction unroll factor
+    notes: str = ""
+
+    def to_json(self) -> dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["tile"] = list(self.tile) if self.tile else None
+        return d
+
+    @staticmethod
+    def from_json(d: dict[str, Any]) -> "Recipe":
+        d = dict(d)
+        if d.get("tile"):
+            d["tile"] = tuple(d["tile"])
+        return Recipe(**d)
+
+
+DEFAULT_RECIPE = Recipe(kind="vectorize")
+
+# MXU-aligned tile presets for the Pallas GEMM (multiples of (8,128)); the
+# evolutionary search mutates within this set.
+GEMM_TILE_PRESETS: tuple[tuple[int, int, int], ...] = (
+    (128, 128, 128),
+    (256, 128, 128),
+    (128, 256, 128),
+    (256, 256, 128),
+    (512, 128, 128),
+    (128, 128, 256),
+    (512, 256, 128),
+    (256, 256, 256),
+)

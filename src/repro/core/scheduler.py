@@ -1,0 +1,158 @@
+"""daisy — the normalized auto-scheduler (paper §4).
+
+Pipeline per program:
+  1. a priori normalization (maximal fission + stride minimization),
+  2. per canonical nest: idiom detection,
+  3. recipe resolution against the transfer-tuning database
+     (exact fingerprint -> embedding nearest-neighbour -> idiom default),
+  4. lowering via the scheduled JAX codegen (einsum/Pallas idioms,
+     vectorization, sequential recurrences).
+
+Seeding (`Daisy.seed`) mirrors the paper: normalize the A variants, give
+BLAS-3 nests the library-call recipe directly, run the evolutionary search
+for the rest, store recipes keyed by fingerprint + embedding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Callable, Mapping, Sequence
+
+import jax
+import numpy as np
+
+from .codegen import Schedule, compile_jax
+from .database import TuningDatabase
+from .embedding import embed_nest
+from .idioms import classify_nest
+from .ir import Array, Node, Program, fingerprint, loop_iterators, nest_computations, walk
+from .normalize import normalize
+from .recipes import Recipe
+from .search import default_recipe_for, evolve_recipe, measure_recipe, schedule_from_recipe
+
+
+@dataclass
+class NestPlan:
+    fingerprint: str
+    idiom: str
+    recipe: Recipe
+    source: str  # 'exact' | 'transfer(d=..)' | 'default(..)'
+
+
+@dataclass
+class ProgramPlan:
+    program: Program  # normalized
+    nests: list[NestPlan]
+
+    @property
+    def normalized(self) -> bool:
+        return True
+
+
+def nest_program(program: Program, nest: Node) -> Program:
+    """A standalone single-nest program (used for per-nest measurement)."""
+    arrays = {a.array for _, a in _nest_accesses(nest)}
+    return Program(
+        name=f"{program.name}:nest",
+        arrays=tuple(a for a in program.arrays if a.name in arrays),
+        body=(nest,),
+        temps=tuple(t for t in program.temps if t in arrays),
+    )
+
+
+def _nest_accesses(nest: Node):
+    from .ir import Computation
+
+    if isinstance(nest, Computation):
+        for a in nest.accesses():
+            yield nest, a
+    else:
+        for _, c in walk(nest):
+            for a in c.accesses():
+                yield c, a
+
+
+def random_inputs(program: Program, seed: int = 0, dtype=np.float32) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    return {
+        a.name: rng.uniform(0.1, 1.0, size=a.shape).astype(dtype)
+        for a in program.input_arrays
+    }
+
+
+class Daisy:
+    def __init__(self, db: TuningDatabase | None = None, interpret: bool = True):
+        self.db = db if db is not None else TuningDatabase()
+        self.interpret = interpret
+
+    # -- planning -------------------------------------------------------------
+    def plan(self, program: Program, normalize_first: bool = True) -> ProgramPlan:
+        p = normalize(program) if normalize_first else program
+        plans: list[NestPlan] = []
+        for nest in p.body:
+            fp = fingerprint(nest)
+            emb = embed_nest(p, nest)
+            idiom = classify_nest(nest)
+            recipe, source = self.db.lookup(fp, emb)
+            if recipe is None:
+                recipe = default_recipe_for(idiom)
+                source = f"default({idiom.kind})"
+            plans.append(NestPlan(fp, idiom.kind, recipe, source))
+        return ProgramPlan(p, plans)
+
+    # -- compilation ----------------------------------------------------------
+    def compile(
+        self, program: Program, normalize_first: bool = True, jit: bool = True
+    ) -> tuple[Callable[[Mapping[str, np.ndarray]], dict], ProgramPlan]:
+        plan = self.plan(program, normalize_first=normalize_first)
+        per_nest = [schedule_from_recipe(np_.recipe, self.interpret) for np_ in plan.nests]
+        fn = compile_jax(plan.program, per_nest[0] if per_nest else Schedule(), per_nest or None)
+        return (jax.jit(fn) if jit else fn), plan
+
+    # -- seeding (paper: A variants define the database) -----------------------
+    def seed(
+        self,
+        programs: Sequence[Program],
+        search: bool = True,
+        search_iterations: int = 2,
+        verbose: bool = False,
+    ) -> None:
+        pending: list[tuple[str, np.ndarray, Program, Recipe]] = []
+        for prog in programs:
+            p = normalize(prog)
+            for nest in p.body:
+                fp = fingerprint(nest)
+                if self.db.lookup_exact(fp) is not None:
+                    continue
+                emb = embed_nest(p, nest)
+                idiom = classify_nest(nest)
+                seed_recipe = default_recipe_for(idiom)
+                if idiom.kind in ("blas3",):
+                    # BLAS-3: straight to the library-call recipe (paper §4)
+                    t = measure_recipe(nest_program(p, nest), random_inputs(nest_program(p, nest)), seed_recipe)
+                    self.db.add(fp, emb, seed_recipe, provenance=f"{prog.name}:idiom", measured_us=t)
+                    continue
+                pending.append((fp, emb, nest_program(p, nest), seed_recipe))
+
+        # epoch 1: evolutionary search per nest
+        results: list[tuple[str, np.ndarray, Recipe, float]] = []
+        for fp, emb, nprog, seed_recipe in pending:
+            if search:
+                best, t = evolve_recipe(nprog, random_inputs(nprog), seed_recipe,
+                                        iterations=search_iterations)
+            else:
+                best, t = seed_recipe, measure_recipe(nprog, random_inputs(nprog), seed_recipe)
+            results.append((fp, emb, best, t))
+            if verbose:
+                print(f"  seeded {fp[:60]} -> {best.kind} ({t:.0f}us)")
+
+        # epochs 2-3: re-seed each nest from its most similar nests' recipes
+        for fp, emb, best, t in results:
+            self.db.add(fp, emb, best, provenance="search", measured_us=t)
+        if search:
+            for fp, emb, nprog, _ in pending:
+                near = self.db.lookup_nearest(emb, k=10)
+                pool = [e.recipe for _, e in near]
+                cur = self.db.lookup_exact(fp)
+                best, t = evolve_recipe(nprog, random_inputs(nprog), cur,
+                                        iterations=1, reseed_pool=pool)
+                self.db.add(fp, emb, best, provenance="search+transfer", measured_us=t)

@@ -1,0 +1,105 @@
+"""Evolutionary recipe search (paper §4, "Seeding a Scheduling Database").
+
+The paper seeds candidate optimizations per nest (originally from the
+Tiramisu auto-scheduler — unavailable offline, replaced by an analytical
+seed: the idiom-derived recipe plus perturbations), refines them over a few
+iterations of mutation + selection with measured runtime as fitness, and
+re-seeds from the recipes of the most similar nests (transfer).
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import replace
+from typing import Callable, Mapping
+
+import jax
+import numpy as np
+
+from .codegen import Schedule, compile_jax
+from .idioms import IdiomMatch
+from .ir import Node, Program
+from .recipes import GEMM_TILE_PRESETS, Recipe
+from .util import time_fn
+
+
+def default_recipe_for(idiom: IdiomMatch) -> Recipe:
+    if idiom.kind in ("blas3",):
+        return Recipe(kind="einsum", notes=f"idiom:{idiom.kind}")
+    if idiom.kind in ("blas2", "dot"):
+        return Recipe(kind="einsum", notes=f"idiom:{idiom.kind}")
+    if idiom.kind == "recurrence":
+        return Recipe(kind="vectorize", notes="recurrence: carried iterators stay sequential")
+    return Recipe(kind="vectorize", notes=f"idiom:{idiom.kind}")
+
+
+def schedule_from_recipe(recipe: Recipe, interpret: bool = True) -> Schedule:
+    if recipe.kind == "einsum":
+        return Schedule(mode="canonical", use_idioms=True, vec_budget=recipe.vec_budget,
+                        pallas_gemm=False, interpret=interpret)
+    if recipe.kind == "pallas_gemm":
+        return Schedule(mode="canonical", use_idioms=True, vec_budget=recipe.vec_budget,
+                        pallas_gemm=True, tile=recipe.tile, interpret=interpret)
+    if recipe.kind == "sequential":
+        return Schedule(mode="as_written", use_idioms=False, vec_budget=recipe.vec_budget,
+                        interpret=interpret)
+    return Schedule(mode="canonical", use_idioms=False, vec_budget=recipe.vec_budget,
+                    interpret=interpret)
+
+
+def _mutate(recipe: Recipe, rng: random.Random) -> Recipe:
+    r = recipe
+    roll = rng.random()
+    if roll < 0.3:
+        r = replace(r, vec_budget=max(1 << 16, min(1 << 24, int(r.vec_budget * rng.choice([0.25, 0.5, 2, 4])))))
+    elif roll < 0.6 and r.kind in ("einsum", "vectorize"):
+        r = replace(r, kind="vectorize" if r.kind == "einsum" else "einsum")
+    elif roll < 0.8 and r.kind == "pallas_gemm":
+        r = replace(r, tile=rng.choice(GEMM_TILE_PRESETS))
+    else:
+        r = replace(r, unroll=rng.choice([1, 2, 4]))
+    return r
+
+
+def measure_recipe(
+    nest_program: Program,
+    inputs: Mapping[str, np.ndarray],
+    recipe: Recipe,
+    repeats: int = 3,
+) -> float:
+    """Wall time (us) of one nest lowered under ``recipe``; inf on failure."""
+    try:
+        sched = schedule_from_recipe(recipe)
+        fn = jax.jit(compile_jax(nest_program, sched))
+        args = {k: np.asarray(v, dtype=np.float32) for k, v in inputs.items()}
+        return time_fn(lambda: fn(args), repeats=repeats)
+    except Exception:
+        return float("inf")
+
+
+def evolve_recipe(
+    nest_program: Program,
+    inputs: Mapping[str, np.ndarray],
+    seed_recipe: Recipe,
+    iterations: int = 3,
+    population: int = 4,
+    rng_seed: int = 0,
+    reseed_pool: list[Recipe] | None = None,
+) -> tuple[Recipe, float]:
+    """Mutation+selection over recipes, runtime fitness (paper's epochs).
+
+    ``reseed_pool`` models the paper's 2nd/3rd epochs: recipes of the most
+    similar nests (by embedding distance) join the population.
+    """
+    rng = random.Random(rng_seed)
+    pop = [seed_recipe] + [_mutate(seed_recipe, rng) for _ in range(population - 1)]
+    if reseed_pool:
+        pop.extend(reseed_pool[: population // 2])
+    best, best_t = seed_recipe, measure_recipe(nest_program, inputs, seed_recipe)
+    for _ in range(iterations):
+        scored = [(measure_recipe(nest_program, inputs, r), r) for r in pop]
+        scored.sort(key=lambda t: t[0])
+        if scored[0][0] < best_t:
+            best_t, best = scored[0]
+        survivors = [r for _, r in scored[: max(2, population // 2)]]
+        pop = survivors + [_mutate(rng.choice(survivors), rng) for _ in range(population - len(survivors))]
+    return best, best_t

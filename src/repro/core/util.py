@@ -1,0 +1,34 @@
+"""Measurement utilities (Hoefler & Belli-style: warm up, repeat, median)."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def _block(x: Any) -> None:
+    jax.tree_util.tree_map(
+        lambda l: l.block_until_ready() if hasattr(l, "block_until_ready") else l, x
+    )
+
+
+def time_fn(
+    fn: Callable[[], Any],
+    repeats: int = 5,
+    warmup: int = 1,
+    max_seconds: float = 10.0,
+) -> float:
+    """Median wall time of ``fn`` in microseconds (blocks on JAX outputs)."""
+    for _ in range(warmup):
+        _block(fn())
+    times = []
+    t_start = time.perf_counter()
+    for _ in range(repeats):
+        t0 = time.perf_counter_ns()
+        _block(fn())
+        times.append((time.perf_counter_ns() - t0) / 1e3)
+        if time.perf_counter() - t_start > max_seconds:
+            break
+    return float(np.median(times))

@@ -1,0 +1,51 @@
+"""Pallas TPU fused RMSNorm: one HBM pass per row block (read x, write y).
+
+Grid over row blocks; the feature dimension stays whole in VMEM (d_model up
+to ~12k fp32 = 48KB/row — a (8, d) block is well within VMEM).  Fusing the
+mean-square reduction with the scale keeps the memory term at 2*bytes(x)
+instead of 3-4 passes for the unfused chain.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * g_ref[...]).astype(o_ref.dtype)
+
+
+def rmsnorm(
+    x: jax.Array,  # (R, D)
+    gamma: jax.Array,  # (D,)
+    *,
+    eps: float = 1e-6,
+    block_r: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    r, d = x.shape
+    br = min(block_r, r)
+    pad = (-r) % br
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    R = x.shape[0]
+    g2 = gamma.reshape(1, d)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(R // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, d), x.dtype),
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x, g2)
+    return out[:r]

@@ -1,0 +1,142 @@
+"""daisy ↔ model integration: schedule a model's contractions a priori.
+
+Each architecture's core per-layer contractions (QKV/O projections, FFN
+matmuls, expert FFN, attention score/value contractions) are expressed as
+loop-nest IR programs, normalized, and resolved against the transfer-tuning
+database.  The resolved recipes determine
+  * which kernel handles each contraction (Pallas GEMM / flash / XLA dot),
+  * the BlockSpec tile sizes (MXU/VMEM-aligned presets), and
+  * the mesh axis proposal for the parallel loop (DP on tokens, TP on
+    features/heads, EP on experts),
+mirroring the paper's flow: normalization first, then a small recipe set
+covers every layer of every architecture.
+
+Because all 10 archs' contractions normalize onto the same canonical GEMM
+fingerprint family, the database stays tiny — this is the paper's central
+claim operating at framework scale.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.database import TuningDatabase
+from ..core.embedding import embed_nest
+from ..core.idioms import classify_nest
+from ..core.ir import Array, Computation, Loop, Program, acc, fingerprint
+from ..core.normalize import normalize
+from ..core.recipes import GEMM_TILE_PRESETS, Recipe
+
+
+def _matmul_program(name: str, m: int, n: int, k: int, order=("i", "j", "k")) -> Program:
+    mac = Computation(
+        "mac", acc("Y", "i", "j"), (acc("X", "i", "k"), acc("W", "k", "j")),
+        lambda x, w: x * w, accumulate="+",
+    )
+    dims = {"i": m, "j": n, "k": k}
+    nest: tuple = (mac,)
+    for it in reversed(order):
+        nest = (Loop(it, dims[it], body=nest),)
+    return Program(
+        name,
+        (Array("X", (m, k)), Array("W", (k, n)), Array("Y", (m, n))),
+        nest,
+    )
+
+
+@dataclass(frozen=True)
+class ContractionPlan:
+    name: str
+    mnk: tuple[int, int, int]
+    fingerprint: str
+    idiom: str
+    recipe: Recipe
+    source: str
+    mesh_axis: str  # proposed sharded axis for the parallel loop
+
+
+def _pick_tile(m: int, n: int, k: int) -> tuple[int, int, int]:
+    """VMEM-aligned tile: grow M/N while the working set stays under ~8MB
+    (double-buffered halves of a 16MB VMEM)."""
+    best = GEMM_TILE_PRESETS[0]
+    budget = 8 * 1024 * 1024
+    for bm, bn, bk in GEMM_TILE_PRESETS:
+        if bm > m or bn > n or bk > k:
+            continue
+        ws = 4 * (bm * bk + bk * bn + bm * bn)  # fp32 working set
+        if ws <= budget and bm * bn >= best[0] * best[1]:
+            best = (bm, bn, bk)
+    return best
+
+
+def model_contractions(cfg: ModelConfig, seq: int, batch: int) -> dict[str, tuple[int, int, int]]:
+    """(M, N, K) of each distinct per-layer contraction at a given shape."""
+    t = seq * batch  # token count (the parallel M dimension)
+    d, h, kv, dh, f = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_ff
+    out: dict[str, tuple[int, int, int]] = {
+        "q_proj": (t, h * dh, d),
+        "kv_proj": (t, kv * dh, d),
+        "o_proj": (t, d, h * dh),
+        "lm_head": (t, cfg.vocab, d),
+    }
+    if f:
+        if cfg.is_moe:
+            from .layers import moe_capacity
+
+            c = moe_capacity(cfg, t)
+            out["expert_ffn_in"] = (c, f, d)   # per expert
+            out["expert_ffn_out"] = (c, d, f)
+        else:
+            out["ffn_in"] = (t, f, d)
+            out["ffn_out"] = (t, d, f)
+    if cfg.family == "hybrid":
+        din = cfg.mamba_expand * d
+        out["mamba_in_proj"] = (t, 2 * din, d)
+        out["mamba_out_proj"] = (t, d, din)
+    win = cfg.window or seq
+    out["attn_scores"] = (seq, min(win, seq), dh)  # per (batch, head)
+    out["attn_values"] = (seq, dh, min(win, seq))
+    return out
+
+
+def seed_model_database(db: TuningDatabase) -> None:
+    """Seed the DB with the canonical GEMM recipe (fingerprint-generic via
+    the embedding metric: every model contraction normalizes to this family)."""
+    probe = _matmul_program("canonical_gemm", 1024, 1024, 1024)
+    norm = normalize(probe)
+    nest = norm.body[0]
+    db.add(
+        fingerprint(nest),
+        embed_nest(norm, nest),
+        Recipe(kind="pallas_gemm", tile=(256, 256, 128), notes="canonical GEMM"),
+        provenance="model-seed",
+    )
+
+
+def plan_model(cfg: ModelConfig, seq: int, batch: int, db: TuningDatabase | None = None) -> list[ContractionPlan]:
+    db = db or TuningDatabase()
+    if not db.entries:
+        seed_model_database(db)
+    plans = []
+    for name, (m, n, k) in model_contractions(cfg, seq, batch).items():
+        # author the nest in an arbitrary (developer-chosen) order; the
+        # normalizer canonicalizes it before the DB lookup
+        order = ("k", "i", "j") if hash(name) % 2 else ("i", "j", "k")
+        prog = normalize(_matmul_program(name, m, n, k, order))
+        nest = prog.body[0]
+        fp = fingerprint(nest)
+        emb = embed_nest(prog, nest)
+        idiom = classify_nest(nest)
+        recipe, source = db.lookup(fp, emb)
+        if recipe is None:
+            recipe = Recipe(kind="pallas_gemm", tile=_pick_tile(m, n, k))
+            source = "default(blas3)"
+        if recipe.tile is None or recipe.tile[0] > m or recipe.tile[1] > n:
+            recipe = Recipe(kind=recipe.kind, tile=_pick_tile(m, n, k), notes=recipe.notes)
+        mesh_axis = "model" if name in ("expert_ffn_in", "expert_ffn_out") else (
+            "data" if m >= n else "model"
+        )
+        plans.append(ContractionPlan(name, (m, n, k), fp, idiom.kind, recipe, source, mesh_axis))
+    return plans

@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, lr_at  # noqa: F401
+from .compression import compress_grads, decompress_grads  # noqa: F401

@@ -1,0 +1,102 @@
+"""AdamW + LR schedules (cosine and MiniCPM's WSD), grad clip/accum.
+
+Pure-functional (no optax): state is a pytree shaped like params, so the
+sharding planner shards optimizer state exactly like the parameters (ZeRO-1
+falls out of pjit: each m/v shard lives with its parameter shard).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"  # 'cosine' | 'wsd' | 'const'
+    wsd_decay_frac: float = 0.1  # final fraction of steps in 1-sqrt decay
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(1, cfg.warmup_steps))
+    if cfg.schedule == "const":
+        sched = jnp.asarray(1.0)
+    elif cfg.schedule == "wsd":
+        # Warmup-Stable-Decay (MiniCPM): stable plateau, then sqrt-like decay
+        decay_start = cfg.total_steps * (1.0 - cfg.wsd_decay_frac)
+        frac = jnp.clip((s - decay_start) / max(1.0, cfg.total_steps - decay_start), 0.0, 1.0)
+        sched = 1.0 - (1.0 - cfg.min_lr_frac) * jnp.sqrt(frac)
+    else:  # cosine
+        frac = jnp.clip(s / max(1, cfg.total_steps), 0.0, 1.0)
+        sched = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(math.pi * frac))
+    return cfg.lr * warm * sched
+
+
+def adamw_init(params: Pytree) -> dict:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {
+        "m": zeros,
+        "v": jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(grads: Pytree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(grads)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+
+
+def adamw_update(
+    cfg: AdamWConfig, params: Pytree, grads: Pytree, state: dict
+) -> tuple[Pytree, dict, dict]:
+    """Returns (new_params, new_state, metrics). NaN/inf grads skip the step
+    (fault tolerance: a poisoned micro-batch must not corrupt the weights)."""
+    step = state["step"]
+    gnorm = global_norm(grads)
+    finite = jnp.isfinite(gnorm)
+    scale = jnp.where(
+        finite & (gnorm > cfg.grad_clip), cfg.grad_clip / jnp.maximum(gnorm, 1e-12), 1.0
+    )
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        g = jnp.where(finite, g, 0.0)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mh = m_new / bc1
+        vh = v_new / bc2
+        delta = lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32))
+        p_new = p.astype(jnp.float32) - jnp.where(finite, delta, 0.0)
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step + 1}
+    metrics = {"grad_norm": gnorm, "lr": lr, "skipped": ~finite}
+    return new_p, new_state, metrics

@@ -1,0 +1,1 @@
+from .suite import BENCHMARKS, NAMES, Benchmark  # noqa: F401

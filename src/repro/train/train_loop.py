@@ -1,0 +1,213 @@
+"""The training driver: jitted step, grad accumulation, checkpoints, FT.
+
+``make_train_step`` builds the pure step (loss -> grads -> psum via pjit ->
+AdamW) with donated params/opt-state.  ``Trainer`` owns the loop: data
+prefetch, periodic atomic checkpoints, heartbeat, straggler monitor, and
+``run_resilient`` which survives injected failures by restoring the last
+checkpoint (deterministic data makes the recovery bit-exact).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from pathlib import Path
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..data.pipeline import DataConfig, LMDataPipeline
+from ..models import model as M
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
+from ..optim.compression import compress_grads, decompress_grads
+from .checkpoint import CheckpointManager
+from .fault import Heartbeat, RestartPolicy, StragglerMonitor
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token CE, vocab-parallel safe.
+
+    The logits' vocab dim is model-sharded (Megatron-style); both the
+    logsumexp and the label-logit extraction are expressed as reductions
+    over that dim (XLA inserts the psum) — no gather that would force an
+    all-gather of the (B, S, V) tensor.  fp32 math on the sharded values.
+    """
+    from ..models.layers import constrain
+
+    lf = constrain(logits.astype(jnp.float32), ("pod", "data"), None, "model")
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    ll = jnp.sum(jnp.where(iota == labels[..., None], lf, 0.0), axis=-1)
+    return jnp.mean(lse - ll)
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> jax.Array:
+    logits = M.forward(cfg, params, batch)
+    return cross_entropy(logits, batch["labels"])
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    accum_steps: int = 1,
+    grad_codec: str = "none",
+    pod_axis: str | None = None,
+):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``accum_steps`` > 1 splits the batch into microbatches (sequential
+    lax.scan) — activation memory drops by the factor, FLOPs unchanged.
+    ``grad_codec``+``pod_axis`` compress the cross-pod gradient all-reduce
+    (bf16/int8 w/ error feedback) when the step runs under shard_map with an
+    explicit pod axis; under plain pjit the psum is implicit and the codec
+    applies to the values feeding it.
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+
+    def step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            b = batch["tokens"].shape[0]
+            assert b % accum_steps == 0
+            mb = b // accum_steps
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape(accum_steps, mb, *x.shape[1:]), batch
+            )
+
+            def acc_fn(carry, mbatch):
+                loss_i, g_i = grads_of(params, mbatch)
+                gsum, lsum = carry
+                return (
+                    jax.tree_util.tree_map(jnp.add, gsum, g_i),
+                    lsum + loss_i,
+                ), None
+
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(acc_fn, (zero, 0.0), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, gsum)
+            loss = lsum / accum_steps
+
+        if grad_codec != "none" and pod_axis is not None:
+            comp, scales, _ = compress_grads(grads, None, grad_codec)
+            comp = jax.lax.pmean(comp, pod_axis)
+            grads = decompress_grads(comp, scales, grad_codec)
+
+        params, opt_state, metrics = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return step
+
+
+@dataclass
+class TrainerConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    keep: int = 3
+    log_every: int = 10
+    heartbeat: str | None = None
+    accum_steps: int = 1
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        opt_cfg: AdamWConfig,
+        data_cfg: DataConfig,
+        tcfg: TrainerConfig,
+        seed: int = 0,
+    ):
+        self.cfg, self.opt_cfg, self.tcfg = cfg, opt_cfg, tcfg
+        self.data = LMDataPipeline(data_cfg)
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
+        self.monitor = StragglerMonitor()
+        self.hb = Heartbeat(tcfg.heartbeat) if tcfg.heartbeat else None
+        self.params = M.init_params(cfg, jax.random.PRNGKey(seed))
+        self.opt_state = adamw_init(self.params)
+        self.step_fn = jax.jit(
+            make_train_step(cfg, opt_cfg, accum_steps=tcfg.accum_steps),
+            donate_argnums=(0, 1),
+        )
+        self.step = 0
+        self.history: list[dict] = []
+
+    # -- checkpoint plumbing --------------------------------------------------
+    def _tree(self):
+        return {"params": self.params, "opt": self.opt_state}
+
+    def save(self) -> None:
+        self.ckpt.save(self.step, self._tree(), extra={"step": self.step})
+
+    def try_restore(self) -> bool:
+        if self.ckpt.latest_step() is None:
+            return False
+        try:
+            step, tree, _ = self.ckpt.restore(self._tree())
+        except (KeyError, ValueError):
+            return False  # incompatible checkpoint (e.g. config changed)
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self.step = step
+        return True
+
+    # -- loops ----------------------------------------------------------------
+    def run(self, n_steps: int, fail_at: int | None = None) -> list[dict]:
+        """Train n_steps from the current position. ``fail_at`` injects a
+        crash (tests the restart path)."""
+        if self.hb:
+            self.hb.start()
+        self.data.start(self.step)
+        try:
+            target = self.step + n_steps
+            while self.step < target:
+                step_id, batch = self.data.next()
+                assert step_id == self.step, (step_id, self.step)
+                if fail_at is not None and self.step == fail_at:
+                    raise RuntimeError(f"injected failure at step {self.step}")
+                t0 = time.perf_counter()
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, batch
+                )
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                self.monitor.observe(self.step, dt)
+                self.step += 1
+                rec = {"step": self.step, "loss": loss, "dt": dt,
+                       "lr": float(metrics["lr"]), "skipped": bool(metrics["skipped"])}
+                self.history.append(rec)
+                if self.step % self.tcfg.ckpt_every == 0:
+                    self.save()
+            return self.history
+        finally:
+            self.data.stop()
+            if self.hb:
+                self.hb.stop()
+
+    def run_resilient(self, n_steps: int, fail_at: int | None = None,
+                      policy: RestartPolicy | None = None) -> list[dict]:
+        """run() wrapped in restore-and-retry (the supervisor loop a cluster
+        scheduler would drive)."""
+        policy = policy or RestartPolicy()
+        target = self.step + n_steps
+        while True:
+            try:
+                self.run(target - self.step, fail_at=fail_at)
+                return self.history
+            except RuntimeError as e:
+                if not policy.should_restart(e):
+                    raise
+                fail_at = None  # the injected failure happens once
+                restored = self.try_restore()
+                if not restored:  # no checkpoint yet: restart from scratch
+                    self.params = M.init_params(self.cfg, jax.random.PRNGKey(0))
+                    self.opt_state = adamw_init(self.params)
+                    self.step = 0

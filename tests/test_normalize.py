@@ -1,0 +1,190 @@
+"""Unit tests for the normalization passes (the paper's §2)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Access, Affine, Array, Computation, Loop, Program, acc, aff, fingerprint,
+    execute_numpy, maximal_fission, normalize, stride_minimization,
+)
+from repro.core.dependence import (
+    DepVector, body_dependence_graph, condense_sccs, nest_direction_vectors,
+    permutation_legal,
+)
+from repro.core.normalize import scalar_expansion
+from repro.core.scheduler import random_inputs
+
+
+def _mac(i="i", j="j", k="k"):
+    return Computation(
+        "mac", acc("C", i, j), (acc("A", i, k), acc("B", k, j)),
+        lambda a, b: a * b, accumulate="+",
+    )
+
+
+def _gemm(order):
+    dims = dict(i=6, j=5, k=4)
+    nest = (_mac(),)
+    for it in reversed(order):
+        nest = (Loop(it, dims[it], body=nest),)
+    return Program(
+        "g", (Array("A", (6, 4)), Array("B", (4, 5)), Array("C", (6, 5))), nest
+    )
+
+
+class TestStrideMinimization:
+    def test_gemm_orders_all_canonicalize_identically(self):
+        fps = {
+            fingerprint(normalize(_gemm(o)).body[0])
+            for o in (["i", "j", "k"], ["i", "k", "j"], ["k", "j", "i"],
+                      ["j", "i", "k"], ["k", "i", "j"], ["j", "k", "i"])
+        }
+        assert len(fps) == 1
+
+    def test_gemm_canonical_order_is_ikj(self):
+        # row-major: innermost j (C and B stride 1), then k, then i
+        norm = normalize(_gemm(["i", "j", "k"]))
+        loops = []
+        node = norm.body[0]
+        while isinstance(node, Loop):
+            loops.append(node.trip_count)
+            node = node.body[0]
+        assert loops == [6, 4, 5]  # i(6), k(4), j(5) innermost
+
+    def test_transposed_copy_keeps_original_order(self):
+        # B[j][i] = A[j][i] written under (i,j): permutation legal, and the
+        # minimal stride order flips to (j,i)
+        cp = Computation("cp", acc("B", "j", "i"), (acc("A", "j", "i"),), lambda a: a)
+        prog = Program(
+            "t", (Array("A", (8, 9)), Array("B", (8, 9))),
+            (Loop("i", 9, body=(Loop("j", 8, body=(cp,)),)),),
+        )
+        norm = normalize(prog)
+        outer = norm.body[0]
+        assert outer.trip_count == 8  # j outermost after minimization
+        inp = random_inputs(prog, dtype=np.float64)
+        assert np.allclose(execute_numpy(norm, inp)["B"], execute_numpy(prog, inp)["B"])
+
+    def test_reduction_self_dep_does_not_block_interchange(self):
+        vecs = nest_direction_vectors(
+            ["i", "j", "k"], {"i": 4, "j": 4, "k": 4}, [_mac()]
+        )
+        # associative accumulation: every permutation legal
+        import itertools
+
+        for perm in itertools.permutations(range(3)):
+            assert permutation_legal(vecs, perm)
+
+    def test_true_recurrence_blocks_interchange(self):
+        # C[i][j] += C[i][j-1]: j carried -> j cannot move outward past... it
+        # can stay legal only if j's '<' stays first-positive; permutation
+        # moving i before j is fine, but reversing dependence is impossible;
+        # here we simply check the carried vector exists
+        rec = Computation(
+            "rec", acc("C", "i", "j"),
+            (acc("C", "i", aff("j", const=-1)),), lambda c: c, accumulate="+",
+        )
+        vecs = nest_direction_vectors(["i", "j"], {"i": 4, "j": 4}, [rec])
+        assert any(v.directions != ("=", "=") for v in vecs)
+
+
+class TestFission:
+    def test_independent_computations_split(self):
+        c1 = Computation("c1", acc("X", "i"), (acc("A", "i"),), lambda a: a + 1)
+        c2 = Computation("c2", acc("Y", "i"), (acc("B", "i"),), lambda b: b * 2)
+        prog = Program(
+            "f", (Array("A", (8,)), Array("B", (8,)), Array("X", (8,)), Array("Y", (8,))),
+            (Loop("i", 8, body=(c1, c2)),),
+        )
+        out = maximal_fission(prog)
+        assert len(out.body) == 2
+        inp = random_inputs(prog, dtype=np.float64)
+        ref = execute_numpy(prog, inp)
+        got = execute_numpy(out, inp)
+        for k in ("X", "Y"):
+            assert np.allclose(got[k], ref[k])
+
+    def test_flow_dependent_computations_split_in_order(self):
+        c1 = Computation("c1", acc("X", "i"), (acc("A", "i"),), lambda a: a + 1)
+        c2 = Computation("c2", acc("Y", "i"), (acc("X", "i"),), lambda x: x * 2)
+        prog = Program(
+            "f2", (Array("A", (8,)), Array("X", (8,)), Array("Y", (8,))),
+            (Loop("i", 8, body=(c1, c2)),),
+        )
+        out = maximal_fission(prog)
+        assert len(out.body) == 2  # same-iteration flow dep: legal to split
+        inp = random_inputs(prog, dtype=np.float64)
+        assert np.allclose(execute_numpy(out, inp)["Y"], execute_numpy(prog, inp)["Y"])
+
+    def test_backward_carried_dependence_stays_fused(self):
+        # c1 reads X[i-1] written by c2 at the previous iteration -> cycle
+        c1 = Computation(
+            "c1", acc("Y", "i"), (acc("X", aff("i", const=-1)),), lambda x: x,
+            guards=(aff("i", const=-1),),
+        )
+        c2 = Computation("c2", acc("X", "i"), (acc("A", "i"), acc("Y", "i")),
+                         lambda a, y: a + y)
+        prog = Program(
+            "f3", (Array("A", (8,)), Array("X", (8,)), Array("Y", (8,))),
+            (Loop("i", 8, body=(c1, c2)),),
+        )
+        out = maximal_fission(prog)
+        assert len(out.body) == 1  # SCC: must stay fused
+        inp = random_inputs(prog, dtype=np.float64)
+        for k in ("X", "Y"):
+            assert np.allclose(execute_numpy(out, inp)[k], execute_numpy(prog, inp)[k])
+
+    def test_scc_topological_reorder(self):
+        # textual order c_use before c_def, but dependence only flows
+        # def -> use across iterations? here: independent arrays, order kept
+        adj = [set(), {0}]  # 1 -> 0
+        order = condense_sccs(adj)
+        assert order == [[1], [0]]
+
+
+class TestScalarExpansion:
+    def test_scalar_promoted_and_semantics_preserved(self):
+        s = Computation("s", acc("T"), (acc("A", "i"),), lambda a: a * 2.0)
+        u = Computation("u", acc("Y", "i"), (acc("T"),), lambda t: t + 1.0)
+        prog = Program(
+            "se", (Array("A", (8,)), Array("T", ()), Array("Y", (8,))),
+            (Loop("i", 8, body=(s, u)),), temps=("T",),
+        )
+        exp = scalar_expansion(prog)
+        assert exp.array("T").shape == (8,)
+        inp = random_inputs(prog, dtype=np.float64)
+        assert np.allclose(execute_numpy(exp, inp)["Y"], execute_numpy(prog, inp)["Y"])
+        # and fission can now split the two computations
+        out = maximal_fission(exp)
+        assert len(out.body) == 2
+
+    def test_scalar_used_outside_not_promoted(self):
+        s = Computation("s", acc("T"), (acc("A", "i"),), lambda a: a * 2.0)
+        u = Computation("u", acc("Y", "j"), (acc("T"),), lambda t: t + 1.0)
+        prog = Program(
+            "se2", (Array("A", (8,)), Array("T", ()), Array("Y", (8,))),
+            (Loop("i", 8, body=(s,)), Loop("j", 8, body=(u,))), temps=("T",),
+        )
+        exp = scalar_expansion(prog)
+        assert exp.array("T").shape == ()  # read outside the writer loop
+
+
+class TestNormalizePipeline:
+    def test_idempotent(self):
+        for order in (["i", "j", "k"], ["k", "j", "i"]):
+            n1 = normalize(_gemm(order))
+            n2 = normalize(n1)
+            assert [fingerprint(n) for n in n1.body] == [
+                fingerprint(n) for n in n2.body
+            ]
+
+    def test_guarded_triangular_nest_preserved(self):
+        tri = aff("i", ("j", -1))
+        c = Computation("c", acc("C", "i", "j"), (acc("C", "i", "j"),),
+                        lambda x: x * 2.0, guards=(tri,))
+        prog = Program(
+            "tri", (Array("C", (6, 6)),),
+            (Loop("i", 6, body=(Loop("j", 6, body=(c,)),)),),
+        )
+        norm = normalize(prog)
+        inp = random_inputs(prog, dtype=np.float64)
+        assert np.allclose(execute_numpy(norm, inp)["C"], execute_numpy(prog, inp)["C"])

@@ -1,0 +1,115 @@
+"""Property-based tests (hypothesis): normalization preserves semantics on
+random affine programs, and the scheduled JAX lowerings agree with the
+numpy oracle."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Access, Affine, Array, Computation, Loop, Program, acc, aff, fingerprint,
+    Schedule, execute_numpy, normalize, run_jax,
+)
+from repro.core.scheduler import random_inputs
+
+DIM = 6  # array extent per dim
+
+
+@st.composite
+def computations(draw, iterators, arrays, idx):
+    """A computation whose write covers all iterators (deterministic)."""
+    n_read = draw(st.integers(1, 2))
+    accumulate = draw(st.sampled_from([None, "+", "+"]))
+    wr_arr = draw(st.sampled_from([a for a in arrays if len(arrays[a]) == len(iterators)]))
+    wr_idx = tuple(
+        aff(it, const=draw(st.integers(0, DIM - 5))) for it in iterators
+    )
+    # permute write dims
+    perm = draw(st.permutations(range(len(iterators))))
+    wr_idx = tuple(wr_idx[p] for p in perm)
+    reads = []
+    for _ in range(n_read):
+        arr = draw(st.sampled_from(list(arrays)))
+        nd = len(arrays[arr])
+        ridx = []
+        for _ in range(nd):
+            kind = draw(st.integers(0, 2))
+            if kind == 0:
+                ridx.append(aff(const=draw(st.integers(0, DIM - 1))))
+            else:
+                it = draw(st.sampled_from(list(iterators)))
+                ridx.append(aff(it, const=draw(st.integers(0, DIM - 5))))
+        reads.append(Access(arr, tuple(ridx)))
+    coefs = [draw(st.floats(0.5, 2.0)) for _ in range(n_read)]
+
+    def expr(*vals, _c=tuple(coefs)):
+        out = 0.0
+        for v, c in zip(vals, _c):
+            out = out + c * v
+        return out
+
+    return Computation(f"c{idx}", Access(wr_arr, wr_idx), tuple(reads), expr,
+                       accumulate=accumulate)
+
+
+@st.composite
+def programs(draw):
+    arrays = {"A": (DIM,), "B": (DIM, DIM), "C": (DIM, DIM), "D": (DIM, DIM, DIM)}
+    n_nests = draw(st.integers(1, 2))
+    body = []
+    for n in range(n_nests):
+        depth = draw(st.integers(1, 3))
+        its = [f"i{n}_{d}" for d in range(depth)]
+        n_comps = draw(st.integers(1, 2))
+        comps = tuple(
+            draw(computations(its, arrays, f"{n}_{k}")) for k in range(n_comps)
+        )
+        nest = comps
+        for it in reversed(its):
+            trip = draw(st.integers(2, 4))
+            nest = (Loop(it, trip, body=nest),)
+        body.append(nest[0])
+    return Program(
+        "rand", tuple(Array(k, v) for k, v in arrays.items()), tuple(body)
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(programs())
+def test_normalize_preserves_semantics(prog):
+    inp = random_inputs(prog, seed=1, dtype=np.float64)
+    ref = execute_numpy(prog, inp)
+    got = execute_numpy(normalize(prog), inp)
+    for name in prog.array_names:
+        np.testing.assert_allclose(got[name], ref[name], rtol=1e-9, atol=1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(programs())
+def test_normalize_idempotent(prog):
+    n1 = normalize(prog)
+    n2 = normalize(n1)
+    assert [fingerprint(x) for x in n1.body] == [fingerprint(x) for x in n2.body]
+
+
+@settings(max_examples=25, deadline=None)
+@given(programs())
+def test_jax_canonical_matches_oracle(prog):
+    inp = random_inputs(prog, seed=2, dtype=np.float64)
+    ref = execute_numpy(prog, inp)
+    norm = normalize(prog)
+    out = run_jax(norm, inp, Schedule(mode="canonical", use_idioms=True))
+    for name in prog.array_names:
+        np.testing.assert_allclose(
+            np.asarray(out[name], dtype=np.float64), ref[name], rtol=2e-4, atol=1e-4
+        )
+
+
+@settings(max_examples=15, deadline=None)
+@given(programs())
+def test_jax_as_written_matches_oracle(prog):
+    inp = random_inputs(prog, seed=3, dtype=np.float64)
+    ref = execute_numpy(prog, inp)
+    out = run_jax(prog, inp, Schedule(mode="as_written", use_idioms=False))
+    for name in prog.array_names:
+        np.testing.assert_allclose(
+            np.asarray(out[name], dtype=np.float64), ref[name], rtol=2e-4, atol=1e-4
+        )

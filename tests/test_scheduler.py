@@ -1,0 +1,120 @@
+"""daisy scheduler: seeding, transfer lookup, A/B equivalence, persistence."""
+import numpy as np
+import pytest
+
+from repro.core import Daisy, Recipe, TuningDatabase, execute_numpy, fingerprint, normalize
+from repro.core.embedding import embed_nest
+from repro.core.idioms import classify_nest
+from repro.core.scheduler import nest_program, random_inputs
+from repro.polybench import BENCHMARKS
+
+
+@pytest.fixture(scope="module")
+def seeded():
+    d = Daisy()
+    progs = [BENCHMARKS[n].make("a", "mini") for n in ("gemm", "2mm", "bicg")]
+    d.seed(progs, search=False)  # analytic seeding (fast test path)
+    return d
+
+
+def test_seed_creates_entries(seeded):
+    assert len(seeded.db.entries) >= 4
+    kinds = {e.recipe.kind for e in seeded.db.entries}
+    assert "einsum" in kinds  # BLAS-3 idiom recipes present
+
+
+def test_b_variant_hits_exact_fingerprints(seeded):
+    pb = normalize(BENCHMARKS["gemm"].make("b", "mini"))
+    hits = 0
+    for nest in pb.body:
+        if seeded.db.lookup_exact(fingerprint(nest)) is not None:
+            hits += 1
+    assert hits == len(pb.body)  # every B nest reduces to a seeded A nest
+
+
+def test_compiled_b_variant_matches_oracle(seeded):
+    b = BENCHMARKS["gemm"]
+    prog = b.make("b", "mini")
+    fn, plan = seeded.compile(prog)
+    assert all(p.source == "exact" for p in plan.nests)
+    inp = random_inputs(prog, seed=9)
+    out = fn(inp)
+    ref = execute_numpy(prog, {k: v.astype(np.float64) for k, v in inp.items()})
+    np.testing.assert_allclose(
+        np.asarray(out[b.output]), ref[b.output], rtol=1e-3, atol=1e-3
+    )
+
+
+def test_idiom_classification():
+    gemm = normalize(BENCHMARKS["gemm"].make("a", "mini"))
+    kinds = [classify_nest(n).kind for n in gemm.body]
+    assert "blas3" in kinds
+    jac = normalize(BENCHMARKS["jacobi-2d"].make("a", "mini"))
+    kinds = [classify_nest(n).kind for n in jac.body]
+    assert "recurrence" in kinds  # time loop carries the dependence
+    bicg = normalize(BENCHMARKS["bicg"].make("a", "mini"))
+    kinds = [classify_nest(n).kind for n in bicg.body]
+    assert "blas2" in kinds
+
+
+def test_db_persistence_roundtrip(tmp_path, seeded):
+    p = tmp_path / "db.json"
+    seeded.db.save(p)
+    loaded = TuningDatabase.load(p)
+    assert len(loaded.entries) == len(seeded.db.entries)
+    e0, l0 = seeded.db.entries[0], loaded.entries[0]
+    assert e0.fingerprint == l0.fingerprint
+    assert e0.recipe == l0.recipe
+    np.testing.assert_allclose(e0.embedding, l0.embedding)
+
+
+def test_transfer_lookup_by_embedding():
+    """A near-but-not-identical nest transfers the most similar recipe."""
+    db = TuningDatabase(radius=50.0)
+    pa = normalize(BENCHMARKS["gemm"].make("a", "mini"))
+    mac_nest = pa.body[1]
+    db.add(fingerprint(mac_nest), embed_nest(pa, mac_nest),
+           Recipe(kind="einsum", notes="seed"), provenance="test")
+    # a GEMM with slightly different sizes: different fingerprint, near embed
+    from repro.models.lowering import _matmul_program
+
+    probe = normalize(_matmul_program("p", 24, 20, 30))
+    nest = probe.body[0]
+    assert db.lookup_exact(fingerprint(nest)) is None
+    recipe, source = db.lookup(fingerprint(nest), embed_nest(probe, nest))
+    assert recipe is not None and source.startswith("transfer")
+
+
+def test_model_lowering_plans():
+    from repro.configs import get_config
+    from repro.models.lowering import plan_model
+
+    for arch in ("mixtral-8x7b", "jamba-1.5-large-398b", "xlstm-350m"):
+        plans = plan_model(get_config(arch), seq=4096, batch=8)
+        assert plans, arch
+        assert all(p.idiom == "blas3" for p in plans)
+        assert all(p.recipe.kind in ("pallas_gemm", "einsum") for p in plans)
+        assert all(p.recipe.tile is not None for p in plans if p.recipe.kind == "pallas_gemm")
+        axes = {p.mesh_axis for p in plans}
+        assert axes <= {"data", "model"}
+
+
+def test_evolutionary_search_returns_usable_recipe():
+    """Paper §4 seeding: evolutionary search (mutation+selection, runtime
+    fitness) must return a recipe no slower than the analytic seed."""
+    from repro.core.search import evolve_recipe, measure_recipe, default_recipe_for
+    from repro.core.idioms import classify_nest
+    from repro.core.scheduler import nest_program, random_inputs
+    from repro.core import normalize
+
+    prog = normalize(BENCHMARKS["gemm"].make("a", "mini"))
+    nest = prog.body[1]  # the MAC nest
+    nprog = nest_program(prog, nest)
+    seed = default_recipe_for(classify_nest(nest))
+    inputs = random_inputs(nprog)
+    t_seed = measure_recipe(nprog, inputs, seed)
+    best, t_best = evolve_recipe(nprog, inputs, seed, iterations=1, population=3)
+    # 1-core CI noise makes tight timing asserts flaky; require a finite,
+    # runnable winner (the search only ever keeps measured candidates)
+    assert t_seed < float("inf") and t_best < float("inf")
+    assert best.kind in ("einsum", "vectorize", "pallas_gemm", "sequential")

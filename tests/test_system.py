@@ -1,0 +1,73 @@
+"""End-to-end behaviour tests: the paper's pipeline operating as a system.
+
+The miniature Fig. 6 experiment: seed daisy from the A variants of several
+benchmarks, compile the *B* variants through normalization + transfer
+tuning, and verify (a) correctness, (b) recipe reuse (every B nest resolves
+from the database), (c) A/B schedule equality — the structural form of
+"same semantics, same performance".
+"""
+import numpy as np
+import pytest
+
+from repro.core import Daisy, execute_numpy, fingerprint, normalize
+from repro.core.scheduler import random_inputs
+from repro.polybench import BENCHMARKS
+
+SUBSET = ("gemm", "2mm", "atax", "bicg", "gesummv", "jacobi-2d")
+
+
+@pytest.fixture(scope="module")
+def daisy():
+    d = Daisy()
+    d.seed([BENCHMARKS[n].make("a", "mini") for n in SUBSET], search=False)
+    return d
+
+
+@pytest.mark.parametrize("name", SUBSET)
+def test_b_variant_compiles_correctly_from_a_seeds(daisy, name):
+    b = BENCHMARKS[name]
+    prog = b.make("b", "mini")
+    fn, plan = daisy.compile(prog)
+    inp = random_inputs(prog, seed=17)
+    out = fn(inp)
+    ref = execute_numpy(prog, {k: v.astype(np.float64) for k, v in inp.items()})
+    np.testing.assert_allclose(
+        np.asarray(out[b.output], np.float64), ref[b.output], rtol=2e-3, atol=2e-3
+    )
+
+
+@pytest.mark.parametrize("name", SUBSET)
+def test_a_and_b_get_identical_schedules(daisy, name):
+    """Normalization maps both variants to the same canonical nests, so the
+    scheduler must produce the same (fingerprint, recipe) plan — the paper's
+    robustness claim in its strongest (structural) form."""
+    b = BENCHMARKS[name]
+    _, plan_a = daisy.compile(b.make("a", "mini"))
+    _, plan_b = daisy.compile(b.make("b", "mini"))
+    sched_a = sorted((p.fingerprint, p.recipe.kind) for p in plan_a.nests)
+    sched_b = sorted((p.fingerprint, p.recipe.kind) for p in plan_b.nests)
+    assert sched_a == sched_b
+
+
+def test_cross_language_variant_reuses_database(daisy):
+    """§4.3: the NumPy-style composition resolves against the C-seeded DB."""
+    b = BENCHMARKS["gemm"]
+    fn, plan = daisy.compile(b.make("np", "mini"))
+    assert all(p.source == "exact" for p in plan.nests)
+    inp = random_inputs(b.make("np", "mini"), seed=23)
+    out = fn(inp)
+    ref = execute_numpy(b.make("a", "mini"), {k: v.astype(np.float64) for k, v in inp.items()})
+    np.testing.assert_allclose(
+        np.asarray(out[b.output], np.float64), ref[b.output], rtol=2e-3, atol=2e-3
+    )
+
+
+def test_database_grows_sublinearly_with_variants():
+    """Normalization collapses the variant space: adding B and NumPy variants
+    of already-seeded benchmarks must add ~no new entries."""
+    d = Daisy()
+    d.seed([BENCHMARKS[n].make("a", "mini") for n in ("gemm", "2mm")], search=False)
+    n_after_a = len(d.db.entries)
+    d.seed([BENCHMARKS[n].make(v, "mini") for n in ("gemm", "2mm") for v in ("b", "np")],
+           search=False)
+    assert len(d.db.entries) <= n_after_a + 1
