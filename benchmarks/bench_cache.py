@@ -1,0 +1,136 @@
+"""Microbenchmark for the content-addressed compilation cache (PR-1).
+
+Four measurements, printed as CSV rows and optionally written as JSON (CI
+uploads the JSON as the perf-trajectory artifact):
+
+  * cache_first_compile   — cold ``Daisy.compile`` of a polybench program
+                            (normalize -> plan -> compile_jax from scratch)
+  * cache_repeat_compile  — the same program re-built from its generator and
+                            compiled again: the content-addressed hit path
+                            (fingerprint + dict lookup).  Must be >= 10x
+                            faster than the cold path.
+  * seed_cold / seed_warm — ``Daisy.seed`` over polybench A variants, cold
+                            vs re-seeding the same programs (indexed
+                            ``lookup_exact`` short-circuits every nest)
+  * db_indexed / db_linear— ``TuningDatabase.lookup_nearest`` via the stacked
+                            embedding matrix vs the seed revision's Python
+                            loop, on the seeded database (identical results
+                            are asserted, only the time differs)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import Daisy
+from repro.core.embedding import distance
+
+from .common import emit
+
+SEED_PROGRAMS = ("gemm", "2mm", "3mm", "bicg", "doitgen")
+
+
+def _linear_nearest(db, embedding, k=1):
+    """The pre-index reference implementation (O(n) Python loop)."""
+    scored = sorted(
+        ((distance(embedding, e.embedding), e) for e in db.entries),
+        key=lambda t: t[0],
+    )
+    return [s for s in scored[:k] if s[0] <= db.radius]
+
+
+def run(repeats: int = 3, json_path: str | None = None) -> dict:
+    from repro.polybench import BENCHMARKS
+
+    results: dict = {}
+
+    # -- compile: cold vs content-addressed hit ------------------------------
+    daisy = Daisy()
+    prog = BENCHMARKS["gemm"].make("a", "mini")
+    t0 = time.perf_counter()
+    fn_cold, _ = daisy.compile(prog)
+    first_s = time.perf_counter() - t0
+
+    repeat_s = float("inf")
+    for _ in range(max(1, repeats)):
+        rebuilt = BENCHMARKS["gemm"].make("a", "mini")  # fresh, structurally equal
+        t0 = time.perf_counter()
+        fn_hit, _ = daisy.compile(rebuilt)
+        repeat_s = min(repeat_s, time.perf_counter() - t0)
+    assert fn_hit is fn_cold, "repeat compile did not hit the cache"
+    speedup = first_s / max(repeat_s, 1e-9)
+    emit("cache_first_compile", first_s * 1e6)
+    emit("cache_repeat_compile", repeat_s * 1e6, f"speedup={speedup:.0f}x")
+    results.update(
+        first_compile_s=first_s,
+        repeat_compile_s=repeat_s,
+        repeat_speedup=speedup,
+        speedup_ok=bool(speedup >= 10.0),
+    )
+
+    # -- seeding: cold vs warm (indexed exact lookups skip every nest) -------
+    progs = [BENCHMARKS[n].make("a", "mini") for n in SEED_PROGRAMS]
+    fresh = Daisy()
+    t0 = time.perf_counter()
+    fresh.seed(progs, search=False)
+    cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    fresh.seed([BENCHMARKS[n].make("a", "mini") for n in SEED_PROGRAMS], search=False)
+    warm_s = time.perf_counter() - t0
+    emit("seed_cold", cold_s * 1e6, f"programs={len(progs)}")
+    emit("seed_warm", warm_s * 1e6, f"speedup={cold_s / max(warm_s, 1e-9):.1f}x")
+    results.update(seed_cold_s=cold_s, seed_warm_s=warm_s,
+                   seed_entries=len(fresh.db.entries))
+
+    # -- database lookup: indexed vs linear ----------------------------------
+    db = fresh.db
+    probes = [e.embedding + 0.01 * (i % 3) for i, e in enumerate(db.entries)]
+    probes += [e.embedding + np.linspace(0, 0.5, e.embedding.size) for e in db.entries]
+    for q in probes:  # equivalence first, then timing
+        got = db.lookup_nearest(q, k=3)
+        want = _linear_nearest(db, q, k=3)
+        assert [(round(d, 9), e.fingerprint) for d, e in got] == [
+            (round(d, 9), e.fingerprint) for d, e in want
+        ], "indexed lookup diverged from the linear reference"
+
+    n_iter = 50
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        for q in probes:
+            db.lookup_nearest(q, k=3)
+    indexed_us = (time.perf_counter() - t0) / (n_iter * len(probes)) * 1e6
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        for q in probes:
+            _linear_nearest(db, q, k=3)
+    linear_us = (time.perf_counter() - t0) / (n_iter * len(probes)) * 1e6
+    emit("db_lookup_indexed", indexed_us, f"entries={len(db.entries)}")
+    emit("db_lookup_linear", linear_us,
+         f"speedup={linear_us / max(indexed_us, 1e-9):.1f}x")
+    results.update(db_indexed_us=indexed_us, db_linear_us=linear_us,
+                   cache_stats=daisy.cache_stats.as_dict())
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=1)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    results = run(repeats=args.repeats, json_path=args.json)
+    if not results["speedup_ok"]:
+        raise SystemExit(
+            f"repeat-compile speedup {results['repeat_speedup']:.1f}x < 10x"
+        )
+
+
+if __name__ == "__main__":
+    main()

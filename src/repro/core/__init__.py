@@ -16,9 +16,11 @@ from .ir import (  # noqa: F401
     acc,
     aff,
     fingerprint,
+    program_fingerprint,
 )
 from .normalize import maximal_fission, normalize, stride_minimization  # noqa: F401
 from .codegen import Schedule, compile_jax, execute_numpy, run_jax  # noqa: F401
+from .cache import CacheStats, CompilationCache, fingerprint_obj  # noqa: F401
 from .database import TuningDatabase  # noqa: F401
 from .recipes import Recipe  # noqa: F401
 from .scheduler import Daisy, random_inputs  # noqa: F401

@@ -6,7 +6,15 @@ Lookup order mirrors the paper exactly:
     (within ``radius``); the recipe of the most similar nest transfers.
  3. miss -> the caller falls back to the default recipe.
 
-The database is JSON-persistable so seeded schedules ship with the framework.
+Both lookups are indexed (PR-1): exact matches go through a fingerprint
+dict, and nearest-neighbour queries run one vectorized ``np.linalg.norm``
+over a stacked embedding matrix instead of a Python loop per entry.  A
+``generation`` counter bumps on every mutation so the compilation cache can
+key plans by database state.
+
+The database is JSON-persistable so seeded schedules ship with the
+framework; the format is versioned (v2 adds the ``version`` field) and
+``load`` accepts the unversioned v1 files written by the seed revision.
 """
 from __future__ import annotations
 
@@ -18,6 +26,8 @@ import numpy as np
 
 from .embedding import distance
 from .recipes import Recipe
+
+SCHEMA_VERSION = 2
 
 
 @dataclass
@@ -34,29 +44,79 @@ class TuningDatabase:
     entries: list[Entry] = field(default_factory=list)
     radius: float = 6.0
 
+    def __post_init__(self) -> None:
+        self._gen = 0
+        self._by_fp: dict[str, int] = {}
+        self._matrix: np.ndarray | None = None
+        self._reindex()
+
+    # -- index maintenance ---------------------------------------------------
+    def _reindex(self) -> None:
+        self._by_fp = {}
+        for i, e in enumerate(self.entries):
+            self._by_fp.setdefault(e.fingerprint, i)
+        self._matrix = None
+
+    def _sync(self) -> None:
+        # Mutations should go through add(); the length check catches the
+        # legacy direct-append pattern.  In-place *replacement* of an entry
+        # keeps the length and is not detected — call reindex() after one.
+        if len(self.entries) != len(self._by_fp):
+            self._reindex()
+            self._gen += 1
+
+    def reindex(self) -> None:
+        """Rebuild the lookup index after mutating ``entries`` in place."""
+        self._reindex()
+        self._gen += 1
+
+    @property
+    def generation(self) -> int:
+        """Bumps on every mutation — cache keys derived from this database
+        must include it so plans resolved against older contents expire."""
+        self._sync()
+        return self._gen
+
     def add(self, fingerprint: str, embedding: np.ndarray, recipe: Recipe,
             provenance: str = "", measured_us: float | None = None) -> None:
-        for e in self.entries:
-            if e.fingerprint == fingerprint:
-                # keep the better-measured recipe
-                if measured_us is not None and (e.measured_us is None or measured_us < e.measured_us):
-                    e.recipe, e.measured_us, e.provenance = recipe, measured_us, provenance
-                return
+        self._sync()
+        i = self._by_fp.get(fingerprint)
+        if i is not None:
+            e = self.entries[i]
+            # keep the better-measured recipe
+            if measured_us is not None and (e.measured_us is None or measured_us < e.measured_us):
+                e.recipe, e.measured_us, e.provenance = recipe, measured_us, provenance
+                self._gen += 1
+            return
         self.entries.append(Entry(fingerprint, np.asarray(embedding, dtype=np.float64),
                                   recipe, provenance, measured_us))
+        self._by_fp[fingerprint] = len(self.entries) - 1
+        self._matrix = None
+        self._gen += 1
 
     def lookup_exact(self, fingerprint: str) -> Recipe | None:
-        for e in self.entries:
-            if e.fingerprint == fingerprint:
-                return e.recipe
-        return None
+        self._sync()
+        i = self._by_fp.get(fingerprint)
+        return self.entries[i].recipe if i is not None else None
 
     def lookup_nearest(self, embedding: np.ndarray, k: int = 1) -> list[tuple[float, Entry]]:
-        scored = sorted(
-            ((distance(embedding, e.embedding), e) for e in self.entries),
-            key=lambda t: t[0],
-        )
-        return [s for s in scored[:k] if s[0] <= self.radius]
+        self._sync()
+        if not self.entries:
+            return []
+        q = np.asarray(embedding, dtype=np.float64)
+        if self._matrix is None or self._matrix.shape[0] != len(self.entries):
+            try:
+                self._matrix = np.stack(
+                    [np.asarray(e.embedding, dtype=np.float64) for e in self.entries]
+                )
+            except ValueError:  # ragged embeddings: pairwise fallback
+                self._matrix = None
+        if self._matrix is not None and q.shape == self._matrix.shape[1:]:
+            d = np.linalg.norm(self._matrix - q[None, :], axis=1)
+        else:
+            d = np.array([distance(q, e.embedding) for e in self.entries])
+        order = np.argsort(d, kind="stable")[:k]
+        return [(float(d[i]), self.entries[i]) for i in order if d[i] <= self.radius]
 
     def lookup(self, fingerprint: str, embedding: np.ndarray) -> tuple[Recipe | None, str]:
         r = self.lookup_exact(fingerprint)
@@ -79,11 +139,20 @@ class TuningDatabase:
             }
             for e in self.entries
         ]
-        Path(path).write_text(json.dumps({"radius": self.radius, "entries": data}, indent=1))
+        Path(path).write_text(json.dumps(
+            {"version": SCHEMA_VERSION, "radius": self.radius, "entries": data},
+            indent=1,
+        ))
 
     @staticmethod
     def load(path: str | Path) -> "TuningDatabase":
         raw = json.loads(Path(path).read_text())
+        version = raw.get("version", 1)  # v1 files carry no version field
+        if version > SCHEMA_VERSION:
+            raise ValueError(
+                f"{path}: database version {version} is newer than supported "
+                f"({SCHEMA_VERSION})"
+            )
         db = TuningDatabase(radius=raw.get("radius", 6.0))
         for d in raw["entries"]:
             db.entries.append(
@@ -91,4 +160,5 @@ class TuningDatabase:
                       Recipe.from_json(d["recipe"]), d.get("provenance", ""),
                       d.get("measured_us"))
             )
+        db._reindex()
         return db

@@ -15,6 +15,7 @@ deliberately block normalization, modeling the paper's lifting failures
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Iterable, Mapping, Sequence
@@ -319,3 +320,89 @@ def fingerprint(node: Node) -> str:
         return f"L[{mapping.get(n.iterator, n.iterator)}:{n.start}:{n.stop}:{n.step}]({inner})"
 
     return fmt(node)
+
+
+def _expr_signature(comp: Computation) -> str:
+    """Content signature of a computation's opaque scalar ``expr``.
+
+    The structural fingerprint deliberately ignores ``expr`` (the IR reasons
+    about access structure only), but a *compilation* cache must not conflate
+    two programs whose nests match structurally while computing different
+    scalar functions.  Two complementary captures:
+
+    * for plain Python functions, a hash of the code object (bytecode,
+      consts, names) plus closure cell values and defaults — exact for the
+      lambdas the front-ends build, including rebuilt-from-source copies;
+    * evaluation at fixed probe points spanning sign changes and magnitudes
+      past common thresholds, for callables without ``__code__`` (ufuncs,
+      partials) and to distinguish equal-bytecode closures whose cell
+      values repr identically.
+
+    If probing fails (e.g. the expr only accepts traced values) the
+    signature falls back to identity, which can only cause cache misses,
+    never wrong hits — cached programs keep their exprs alive, so a live
+    entry's id cannot be reused by a different function.
+    """
+    parts = []
+    f = comp.expr
+    code = getattr(f, "__code__", None)
+    if code is not None:
+        try:
+            def cell_text(v: Any) -> str:
+                # repr truncates large arrays ('...'), which would conflate
+                # closures over arrays equal only at the printed corners
+                if isinstance(v, np.ndarray):
+                    digest = hashlib.sha256(np.ascontiguousarray(v).tobytes())
+                    return f"nd{v.shape}{v.dtype}:{digest.hexdigest()[:16]}"
+                return repr(v)
+
+            cells = tuple(
+                cell_text(c.cell_contents)
+                for c in (getattr(f, "__closure__", None) or ())
+            )
+            src = (code.co_code.hex() + repr(code.co_consts) + repr(code.co_names)
+                   + repr(cells) + repr(getattr(f, "__defaults__", None)))
+            parts.append("c:" + hashlib.sha256(src.encode()).hexdigest()[:16])
+        except Exception:
+            pass
+    n = len(comp.reads)
+    probes = (
+        [1.0] * n,
+        [0.5 + 0.375 * k for k in range(n)],
+        [-1.25 + 0.5 * k for k in range(n)],
+        [3.75 - 0.625 * k for k in range(n)],
+        [-4.5 + 1.125 * k for k in range(n)],
+    )
+    vals = []
+    for p in probes:
+        try:
+            v = float(f(*[np.float64(x) for x in p]))
+        except Exception:
+            if parts:  # bytecode hash alone still identifies the function
+                return parts[0]
+            return f"opaque@{id(f):x}"
+        vals.append(f"{v:.12g}" if np.isfinite(v) else repr(v))
+    parts.append(",".join(vals))
+    return "|".join(parts)
+
+
+def program_fingerprint(program: Program, content: bool = True) -> str:
+    """Stable whole-program fingerprint: arrays, temps, body, expr content.
+
+    Invariant to iterator renaming (via the per-nest ``fingerprint``) and to
+    the program's display name, so structurally-identical programs — the
+    paper's A/B variants after normalization, or a re-built config — address
+    the same cache slot.  With ``content=True`` (the default used by the
+    compilation cache) each computation's scalar expression is probed so that
+    structure-equal programs computing different math stay distinct.
+    """
+    arrays = ";".join(
+        f"{a.name}:{'x'.join(map(str, a.shape))}:{a.dtype}" for a in program.arrays
+    )
+    temps = ",".join(sorted(program.temps))
+    body = "|".join(fingerprint(n) for n in program.body)
+    text = f"arrays({arrays})temps({temps})body({body})"
+    if content:
+        exprs = "|".join(_expr_signature(c) for _, c in program_computations(program))
+        text += f"exprs({exprs})"
+    return hashlib.sha256(text.encode()).hexdigest()

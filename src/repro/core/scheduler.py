@@ -20,11 +20,21 @@ from typing import Callable, Mapping, Sequence
 import jax
 import numpy as np
 
+from .cache import CacheStats, CompilationCache
 from .codegen import Schedule, compile_jax
 from .database import TuningDatabase
 from .embedding import embed_nest
 from .idioms import classify_nest
-from .ir import Array, Node, Program, fingerprint, loop_iterators, nest_computations, walk
+from .ir import (
+    Array,
+    Node,
+    Program,
+    fingerprint,
+    loop_iterators,
+    nest_computations,
+    program_fingerprint,
+    walk,
+)
 from .normalize import normalize
 from .recipes import Recipe
 from .search import default_recipe_for, evolve_recipe, measure_recipe, schedule_from_recipe
@@ -80,33 +90,74 @@ def random_inputs(program: Program, seed: int = 0, dtype=np.float32) -> dict[str
 
 
 class Daisy:
-    def __init__(self, db: TuningDatabase | None = None, interpret: bool = True):
+    def __init__(
+        self,
+        db: TuningDatabase | None = None,
+        interpret: bool = True,
+        cache: CompilationCache | None = None,
+    ):
         self.db = db if db is not None else TuningDatabase()
         self.interpret = interpret
+        # Content-addressed memo for the normalize -> plan -> compile chain.
+        # Keys include the database generation, so seeding new recipes
+        # expires stale plans while normalized programs stay cached.
+        self.cache = cache if cache is not None else CompilationCache()
+
+    @property
+    def cache_stats(self) -> CacheStats:
+        return self.cache.stats
+
+    # -- caching --------------------------------------------------------------
+    def _normalized(self, program: Program, fp: str | None = None) -> Program:
+        key = ("normalize", fp or program_fingerprint(program))
+        return self.cache.get_or_build(key, lambda: normalize(program))
+
+    def _plan_key(self, fp: str, normalize_first: bool) -> tuple:
+        # id(db) scopes entries to the database instance (self.db keeps it
+        # alive), so Daisy objects sharing one CompilationCache but holding
+        # different databases never exchange plans; generation expires plans
+        # resolved against older contents of the *same* database.
+        return (fp, normalize_first, self.interpret, id(self.db), self.db.generation)
 
     # -- planning -------------------------------------------------------------
-    def plan(self, program: Program, normalize_first: bool = True) -> ProgramPlan:
-        p = normalize(program) if normalize_first else program
+    def plan(
+        self, program: Program, normalize_first: bool = True, _fp: str | None = None
+    ) -> ProgramPlan:
+        fp = _fp or program_fingerprint(program)
+        key = ("plan",) + self._plan_key(fp, normalize_first)
+        cached = self.cache.get(key)
+        if cached is not None:
+            return cached
+        p = self._normalized(program, fp) if normalize_first else program
         plans: list[NestPlan] = []
         for nest in p.body:
-            fp = fingerprint(nest)
+            nest_fp = fingerprint(nest)
             emb = embed_nest(p, nest)
             idiom = classify_nest(nest)
-            recipe, source = self.db.lookup(fp, emb)
+            recipe, source = self.db.lookup(nest_fp, emb)
             if recipe is None:
                 recipe = default_recipe_for(idiom)
                 source = f"default({idiom.kind})"
-            plans.append(NestPlan(fp, idiom.kind, recipe, source))
-        return ProgramPlan(p, plans)
+            plans.append(NestPlan(nest_fp, idiom.kind, recipe, source))
+        result = ProgramPlan(p, plans)
+        self.cache.put(key, result)
+        return result
 
     # -- compilation ----------------------------------------------------------
     def compile(
         self, program: Program, normalize_first: bool = True, jit: bool = True
     ) -> tuple[Callable[[Mapping[str, np.ndarray]], dict], ProgramPlan]:
-        plan = self.plan(program, normalize_first=normalize_first)
+        fp = program_fingerprint(program)
+        key = ("compile", jit) + self._plan_key(fp, normalize_first)
+        cached = self.cache.get(key)
+        if cached is not None:
+            return cached
+        plan = self.plan(program, normalize_first=normalize_first, _fp=fp)
         per_nest = [schedule_from_recipe(np_.recipe, self.interpret) for np_ in plan.nests]
         fn = compile_jax(plan.program, per_nest[0] if per_nest else Schedule(), per_nest or None)
-        return (jax.jit(fn) if jit else fn), plan
+        result = ((jax.jit(fn) if jit else fn), plan)
+        self.cache.put(key, result)
+        return result
 
     # -- seeding (paper: A variants define the database) -----------------------
     def seed(
@@ -118,7 +169,7 @@ class Daisy:
     ) -> None:
         pending: list[tuple[str, np.ndarray, Program, Recipe]] = []
         for prog in programs:
-            p = normalize(prog)
+            p = self._normalized(prog)
             for nest in p.body:
                 fp = fingerprint(nest)
                 if self.db.lookup_exact(fp) is not None:

@@ -1,0 +1,11 @@
+"""jax version compatibility shims for the Pallas TPU kernels.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in newer
+jax releases; the kernels are written against the current name and this shim
+resolves whichever the installed jax provides.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -17,10 +17,11 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from ..configs import ARCHS, SHAPES, get_config, shape_applicable  # noqa: E402
+from ..core.cache import fingerprint_obj  # noqa: E402
 from ..models import model as M  # noqa: E402
 from ..optim.adamw import AdamWConfig, adamw_init  # noqa: E402
 from ..train.train_loop import make_train_step  # noqa: E402
-from .mesh import dp_axes, make_production_mesh  # noqa: E402
+from .mesh import dp_axes, make_production_mesh, set_mesh  # noqa: E402
 from .sharding import batch_specs, param_specs, replicated, state_specs  # noqa: E402
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
@@ -79,6 +80,17 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
     return out
 
 
+def cell_cache_key(arch: str, shape_name: str, multi_pod: bool,
+                   fsdp: bool = True, variant: str = "base") -> str:
+    """Content address of one dry-run cell: the full config, shape, mesh and
+    jax version.  A cached JSON whose key differs (config edit, toolchain
+    bump) is recomputed instead of silently served stale."""
+    return fingerprint_obj(
+        get_config(arch), SHAPES[shape_name], multi_pod, fsdp, variant,
+        jax.__version__,
+    )
+
+
 def input_specs(arch: str, shape_name: str) -> dict:
     """ShapeDtypeStruct stand-ins for every model input of this cell."""
     cfg = get_config(arch)
@@ -133,7 +145,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, opt_cfg=None,
     mesh_name = "2x16x16" if multi_pod else "16x16"
     rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                  "kind": shape.kind, "sharding": "fsdp" if fsdp else "tp",
-                 "variant": variant}
+                 "variant": variant,
+                 "cache_key": cell_cache_key(arch, shape_name, multi_pod, fsdp, variant)}
     if not ok:
         rec.update(status="skipped", reason=why)
         return rec
@@ -148,7 +161,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, opt_cfg=None,
                              fsdp=fsdp and shape.kind == "train", cfg=cfg)
     batch = input_specs(arch, shape_name)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         if shape.kind == "train":
             # opt state m/v shaped like params -> same specs; step scalar repl
             ospecs = {
@@ -208,6 +221,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, opt_cfg=None,
     mem = compiled.memory_analysis()
     print(mem)  # proves it fits (bytes per device)
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax <= 0.4.x returns [dict]
+        cost = cost[0] if cost else None
     print({k: cost.get(k) for k in ("flops", "bytes accessed")} if cost else cost)
     coll = collective_bytes(compiled.as_text())
 
@@ -248,8 +263,15 @@ def main() -> None:
                 tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
                 path = outdir / f"{tag}.json"
                 if path.exists():
-                    print(f"[skip-cached] {tag}")
-                    continue
+                    try:
+                        prev = json.loads(path.read_text())
+                    except (json.JSONDecodeError, OSError):
+                        prev = {}
+                    want = cell_cache_key(arch, shape, mp, fsdp=args.sharding == "fsdp")
+                    if prev.get("cache_key") == want and prev.get("status") != "failed":
+                        print(f"[skip-cached] {tag}")
+                        continue
+                    print(f"[stale-cache] {tag}: recomputing")
                 print(f"[lower] {tag}", flush=True)
                 try:
                     rec = lower_cell(arch, shape, mp, fsdp=args.sharding == "fsdp")

@@ -30,3 +30,9 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
 def dp_axes(mesh) -> tuple[str, ...]:
     """The data-parallel axes (pod folds into DP for the batch dimension)."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def set_mesh(mesh):
+    """``with set_mesh(mesh):`` on any jax: ``jax.set_mesh`` where it exists,
+    else the Mesh object itself (a context manager on jax <= 0.4.x)."""
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh

@@ -13,6 +13,7 @@ with half-finished ones — the decode step masks per slot via its own length.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Any
 
 import jax
@@ -20,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..core.cache import fingerprint_obj, jit_cache
 from ..models import model as M
 
 
@@ -47,7 +49,13 @@ class ServingEngine:
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
         self.cfg, self.params, self.scfg = cfg, params, scfg
-        self._decode = jax.jit(lambda p, st, t: M.decode_step(cfg, p, st, t))
+        # One jitted decode step per config *content*: re-created engines
+        # with an equal config share the function and its jax trace cache,
+        # so slot refills and engine restarts never retrace.
+        self._decode = jit_cache.get_or_build(
+            ("serve.decode", fingerprint_obj(cfg)),
+            lambda: jax.jit(partial(M.decode_step, cfg)),
+        )
         self.queue: list[Request] = []
         self.active: dict[int, Request] = {}
         self.rng = np.random.default_rng(scfg.seed)

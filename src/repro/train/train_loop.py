@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..core.cache import fingerprint_obj, jit_cache
 from ..data.pipeline import DataConfig, LMDataPipeline
 from ..models import model as M
 from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
@@ -134,9 +135,15 @@ class Trainer:
         self.hb = Heartbeat(tcfg.heartbeat) if tcfg.heartbeat else None
         self.params = M.init_params(cfg, jax.random.PRNGKey(seed))
         self.opt_state = adamw_init(self.params)
-        self.step_fn = jax.jit(
-            make_train_step(cfg, opt_cfg, accum_steps=tcfg.accum_steps),
-            donate_argnums=(0, 1),
+        # Keyed by config content: a Trainer re-created with equal configs
+        # (checkpoint-resume, fault-tolerant restarts) reuses the jitted
+        # step and its traces instead of rebuilding and recompiling.
+        self.step_fn = jit_cache.get_or_build(
+            ("train.step", fingerprint_obj(cfg, opt_cfg), tcfg.accum_steps),
+            lambda: jax.jit(
+                make_train_step(cfg, opt_cfg, accum_steps=tcfg.accum_steps),
+                donate_argnums=(0, 1),
+            ),
         )
         self.step = 0
         self.history: list[dict] = []

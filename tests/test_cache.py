@@ -1,0 +1,294 @@
+"""PR-1 cache subsystem: hit/miss semantics, fingerprint stability, indexed
+TuningDatabase equivalence with the seed revision's linear scans, and the
+versioned JSON round-trip."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Array,
+    CompilationCache,
+    Computation,
+    Daisy,
+    Loop,
+    Program,
+    Recipe,
+    TuningDatabase,
+    acc,
+    fingerprint,
+    program_fingerprint,
+)
+from repro.core.cache import fingerprint_obj
+from repro.core.database import SCHEMA_VERSION, Entry
+from repro.core.embedding import DIM, distance, embed_nest
+from repro.core.ir import rename_nest
+from repro.polybench import BENCHMARKS
+
+
+def _tiny_program(name="p", expr=lambda a, b: a * b):
+    c = Computation("c", acc("C", "i", "j"), (acc("A", "i", "k"), acc("B", "k", "j")),
+                    expr, accumulate="+")
+    nest = Loop("i", 4, body=(Loop("j", 4, body=(Loop("k", 4, body=(c,)),)),))
+    arrays = (Array("A", (4, 4)), Array("B", (4, 4)), Array("C", (4, 4)))
+    return Program(name, arrays, (nest,))
+
+
+# ---------------------------------------------------------------------------
+# CompilationCache semantics
+# ---------------------------------------------------------------------------
+class TestCompilationCache:
+    def test_hit_miss_and_stats(self):
+        c = CompilationCache(capacity=4)
+        assert c.get("k") is None
+        assert c.stats.misses == 1 and c.stats.hits == 0
+        c.put("k", 42)
+        assert c.get("k") == 42
+        assert c.stats.hits == 1 and c.stats.misses == 1
+        assert c.stats.hit_rate == 0.5
+
+    def test_get_or_build_builds_once(self):
+        c = CompilationCache()
+        calls = []
+        for _ in range(3):
+            v = c.get_or_build("x", lambda: calls.append(1) or "built")
+        assert v == "built" and len(calls) == 1
+
+    def test_lru_eviction(self):
+        c = CompilationCache(capacity=2)
+        c.put("a", 1)
+        c.put("b", 2)
+        c.get("a")          # refresh 'a': 'b' becomes the LRU victim
+        c.put("c", 3)
+        assert "a" in c and "c" in c and "b" not in c
+        assert c.stats.evictions == 1
+
+    def test_invalidate(self):
+        c = CompilationCache()
+        c.put("a", 1)
+        c.put("b", 2)
+        c.invalidate("a")
+        assert "a" not in c and "b" in c
+        c.invalidate()
+        assert len(c) == 0
+
+
+# ---------------------------------------------------------------------------
+# Program fingerprint
+# ---------------------------------------------------------------------------
+class TestProgramFingerprint:
+    def test_stable_across_iterator_renaming_and_name(self):
+        p1 = _tiny_program("alpha")
+        p2 = Program("beta", p1.arrays,
+                     tuple(rename_nest(n, "_renamed") for n in p1.body))
+        assert [fingerprint(n) for n in p1.body] == [fingerprint(n) for n in p2.body]
+        assert program_fingerprint(p1) == program_fingerprint(p2)
+
+    def test_distinguishes_expr_content(self):
+        p1 = _tiny_program(expr=lambda a, b: a * b)
+        p2 = _tiny_program(expr=lambda a, b: a * b * 2.0)
+        # structure identical, math different: nest fingerprints collide ...
+        assert fingerprint(p1.body[0]) == fingerprint(p2.body[0])
+        # ... but the compile-cache key must not
+        assert program_fingerprint(p1) != program_fingerprint(p2)
+
+    def test_distinguishes_threshold_exprs(self):
+        # piecewise exprs that agree at small probe values must not collide
+        # (caught in review: a 3-point probe saw a*b == a*b + relu(a - 2))
+        p1 = _tiny_program(expr=lambda a, b: a * b)
+        p2 = _tiny_program(expr=lambda a, b: a * b + max(a - 2.0, 0.0))
+        assert program_fingerprint(p1) != program_fingerprint(p2)
+
+    def test_identical_lambdas_rebuilt_still_hit(self):
+        # two separately-constructed but identical closures must collide
+        # (otherwise generator-rebuilt programs would never cache-hit)
+        def make(scale):
+            return _tiny_program(expr=lambda a, b: scale * a * b)
+
+        assert program_fingerprint(make(1.5)) == program_fingerprint(make(1.5))
+        assert program_fingerprint(make(1.5)) != program_fingerprint(make(2.5))
+
+    def test_distinguishes_shapes_and_temps(self):
+        p1 = _tiny_program()
+        bigger = tuple(Array(a.name, (8, 8)) for a in p1.arrays)
+        p2 = Program(p1.name, bigger, p1.body)
+        assert program_fingerprint(p1) != program_fingerprint(p2)
+        p3 = Program(p1.name, p1.arrays, p1.body, temps=("C",))
+        assert program_fingerprint(p1) != program_fingerprint(p3)
+
+    def test_fingerprint_obj_config_content(self):
+        from repro.configs import get_config
+
+        a, b = get_config("mixtral-8x7b"), get_config("mixtral-8x7b")
+        assert fingerprint_obj(a) == fingerprint_obj(b)
+        assert fingerprint_obj(a) != fingerprint_obj(get_config("qwen1.5-32b"))
+
+
+# ---------------------------------------------------------------------------
+# Daisy compile cache
+# ---------------------------------------------------------------------------
+class TestDaisyCache:
+    def test_repeat_compile_hits(self):
+        d = Daisy()
+        fn1, plan1 = d.compile(BENCHMARKS["gemm"].make("a", "mini"))
+        fn2, plan2 = d.compile(BENCHMARKS["gemm"].make("a", "mini"))  # fresh object
+        assert fn1 is fn2 and plan1 is plan2
+        assert d.cache_stats.hits >= 1
+
+    def test_different_programs_miss(self):
+        d = Daisy()
+        fn1, _ = d.compile(BENCHMARKS["gemm"].make("a", "mini"))
+        fn2, _ = d.compile(BENCHMARKS["bicg"].make("a", "mini"))
+        assert fn1 is not fn2
+
+    def test_db_mutation_invalidates_plans(self):
+        d = Daisy()
+        prog = BENCHMARKS["gemm"].make("a", "mini")
+        fn1, plan1 = d.compile(prog)
+        assert all(p.source.startswith("default") for p in plan1.nests)
+        d.seed([prog], search=False)  # bumps db.generation
+        fn2, plan2 = d.compile(prog)
+        assert plan2 is not plan1
+        assert all(p.source == "exact" for p in plan2.nests)
+
+    def test_shared_cache_isolates_databases(self):
+        # two Daisy instances sharing one CompilationCache but holding
+        # different databases must not exchange plans (caught in review)
+        shared = CompilationCache()
+        d1 = Daisy(cache=shared)
+        prog = BENCHMARKS["gemm"].make("a", "mini")
+        d1.seed([prog], search=False)
+        _, plan1 = d1.compile(prog)
+        assert all(p.source == "exact" for p in plan1.nests)
+        d2 = Daisy(cache=shared)  # empty database
+        _, plan2 = d2.compile(BENCHMARKS["gemm"].make("a", "mini"))
+        assert plan2 is not plan1
+        assert all(p.source.startswith("default") for p in plan2.nests)
+
+    def test_cached_fn_still_correct(self):
+        from repro.core import execute_numpy
+        from repro.core.scheduler import random_inputs
+
+        d = Daisy()
+        prog = BENCHMARKS["gemm"].make("a", "mini")
+        d.compile(prog)
+        fn, _ = d.compile(BENCHMARKS["gemm"].make("a", "mini"))
+        inp = random_inputs(prog, seed=3)
+        out = fn(inp)
+        ref = execute_numpy(prog, {k: v.astype(np.float64) for k, v in inp.items()})
+        np.testing.assert_allclose(np.asarray(out["C"]), ref["C"], rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Indexed TuningDatabase
+# ---------------------------------------------------------------------------
+def _linear_exact(db, fp):
+    for e in db.entries:
+        if e.fingerprint == fp:
+            return e.recipe
+    return None
+
+
+def _linear_nearest(db, embedding, k=1):
+    scored = sorted(
+        ((distance(embedding, e.embedding), e) for e in db.entries),
+        key=lambda t: t[0],
+    )
+    return [s for s in scored[:k] if s[0] <= db.radius]
+
+
+@pytest.fixture(scope="module")
+def seeded_db():
+    d = Daisy()
+    d.seed([BENCHMARKS[n].make("a", "mini") for n in ("gemm", "2mm", "bicg")],
+           search=False)
+    return d.db
+
+
+class TestIndexedDatabase:
+    def test_exact_matches_linear(self, seeded_db):
+        for e in seeded_db.entries:
+            assert seeded_db.lookup_exact(e.fingerprint) is _linear_exact(seeded_db, e.fingerprint)
+        assert seeded_db.lookup_exact("no-such-nest") is None
+
+    def test_nearest_matches_linear(self, seeded_db):
+        rng = np.random.default_rng(0)
+        probes = [e.embedding for e in seeded_db.entries]
+        probes += [e.embedding + rng.normal(0, 0.1, DIM) for e in seeded_db.entries]
+        probes.append(np.full(DIM, 1e6))  # far outside radius -> empty
+        for q in probes:
+            for k in (1, 3, len(seeded_db.entries)):
+                got = seeded_db.lookup_nearest(q, k=k)
+                want = _linear_nearest(seeded_db, q, k=k)
+                assert [(pytest.approx(dist), e.fingerprint) for dist, e in want] == [
+                    (dist, e.fingerprint) for dist, e in got
+                ]
+
+    def test_add_dedup_keeps_better_measurement(self):
+        db = TuningDatabase()
+        emb = np.zeros(DIM)
+        db.add("fp", emb, Recipe(kind="einsum"), measured_us=100.0)
+        db.add("fp", emb, Recipe(kind="vectorize"), measured_us=200.0)  # worse: ignored
+        assert len(db.entries) == 1 and db.lookup_exact("fp").kind == "einsum"
+        db.add("fp", emb, Recipe(kind="sequential"), measured_us=50.0)  # better: replaces
+        assert db.lookup_exact("fp").kind == "sequential"
+
+    def test_generation_bumps_on_mutation(self):
+        db = TuningDatabase()
+        g0 = db.generation
+        db.add("a", np.zeros(DIM), Recipe())
+        assert db.generation > g0
+        g1 = db.generation
+        db.add("a", np.zeros(DIM), Recipe())  # duplicate, no improvement
+        assert db.generation == g1
+        # direct appends (legacy style) are detected and reindexed
+        db.entries.append(Entry("b", np.ones(DIM), Recipe()))
+        assert db.lookup_exact("b") is not None
+        assert db.generation > g1
+        # same-length in-place replacement needs an explicit reindex()
+        db.entries[0] = Entry("c", np.zeros(DIM), Recipe(kind="einsum"))
+        db.reindex()
+        assert db.lookup_exact("a") is None
+        assert db.lookup_exact("c").kind == "einsum"
+
+
+# ---------------------------------------------------------------------------
+# Versioned persistence
+# ---------------------------------------------------------------------------
+class TestPersistence:
+    def test_roundtrip_is_versioned(self, tmp_path, seeded_db):
+        p = tmp_path / "db.json"
+        seeded_db.save(p)
+        raw = json.loads(p.read_text())
+        assert raw["version"] == SCHEMA_VERSION
+        loaded = TuningDatabase.load(p)
+        assert len(loaded.entries) == len(seeded_db.entries)
+        for e, l in zip(seeded_db.entries, loaded.entries):
+            assert e.fingerprint == l.fingerprint and e.recipe == l.recipe
+            np.testing.assert_allclose(e.embedding, l.embedding)
+        # the loaded database is fully indexed
+        for e in seeded_db.entries:
+            assert loaded.lookup_exact(e.fingerprint) == _linear_exact(loaded, e.fingerprint)
+
+    def test_loads_v1_files(self, tmp_path):
+        legacy = {
+            "radius": 4.5,
+            "entries": [{
+                "fingerprint": "fp1",
+                "embedding": [0.0] * DIM,
+                "recipe": Recipe(kind="einsum").to_json(),
+                "provenance": "legacy",
+                "measured_us": 12.0,
+            }],
+        }
+        p = tmp_path / "v1.json"
+        p.write_text(json.dumps(legacy))
+        db = TuningDatabase.load(p)
+        assert db.radius == 4.5
+        assert db.lookup_exact("fp1").kind == "einsum"
+
+    def test_rejects_future_versions(self, tmp_path):
+        p = tmp_path / "future.json"
+        p.write_text(json.dumps({"version": SCHEMA_VERSION + 1, "entries": []}))
+        with pytest.raises(ValueError, match="newer than supported"):
+            TuningDatabase.load(p)

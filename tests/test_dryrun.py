@@ -36,6 +36,7 @@ class TestCollectiveParser:
         assert out["collective-permute"] == 16 * 16 * 2
 
 
+@pytest.mark.slow
 def test_small_mesh_train_lowering_subprocess():
     """Lower + compile a reduced arch's train step on an 8-device (2,4) mesh
     and on a (2,2,2) pod mesh; assert collectives exist and it compiles."""
@@ -66,7 +67,8 @@ def test_small_mesh_train_lowering_subprocess():
             step = make_train_step(cfg, AdamWConfig())
             ws = lambda t, s: jax.tree_util.tree_map(
                 lambda a, b: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=b), t, s)
-            with jax.set_mesh(mesh):
+            from repro.launch.mesh import set_mesh
+            with set_mesh(mesh):
                 lowered = jax.jit(step).lower(ws(params, pspecs), ws(opt, ospecs), ws(batch, bspecs))
                 compiled = lowered.compile()
             mem = compiled.memory_analysis()
@@ -82,6 +84,7 @@ def test_small_mesh_train_lowering_subprocess():
     assert "DRYRUN_SMALL_OK" in out.stdout, out.stdout[-2000:] + out.stderr[-3000:]
 
 
+@pytest.mark.slow
 def test_decode_small_mesh_subprocess():
     code = textwrap.dedent("""
         import os
@@ -101,7 +104,8 @@ def test_decode_small_mesh_subprocess():
         ws = lambda t, s: jax.tree_util.tree_map(
             lambda a, b: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=b), t, s)
         tok = jax.ShapeDtypeStruct((4, 1), jnp.int32)
-        with jax.set_mesh(mesh):
+        from repro.launch.mesh import set_mesh
+        with set_mesh(mesh):
             lowered = jax.jit(partial(M.decode_step, cfg)).lower(
                 ws(params, pspecs), ws(state, sspecs), tok)
             lowered.compile()

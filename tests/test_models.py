@@ -4,6 +4,10 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+# Each per-arch case compiles a reduced model (4-12 s each); the sweep
+# dominates suite wall time, so the whole module runs in the slow tier.
+pytestmark = pytest.mark.slow
+
 from repro.configs import ARCHS, get_config
 from repro.models import model as M
 from repro.optim.adamw import AdamWConfig, adamw_init

@@ -2,6 +2,12 @@
 random affine programs, and the scheduled JAX lowerings agree with the
 numpy oracle."""
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (CI installs it via requirements.txt)",
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -122,6 +122,7 @@ class TestCheckpoint:
             mgr.restore({"a": jnp.zeros((2,)), "b": jnp.zeros((3,))})
 
 
+@pytest.mark.slow
 class TestTrainerFT:
     def test_resume_is_bit_exact(self, tmp_path):
         ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
@@ -163,6 +164,7 @@ class TestTrainerFT:
         assert age is not None and age < 5.0
 
 
+@pytest.mark.slow
 def test_elastic_remesh_subprocess():
     """Save on a (2,2) mesh, restore + lower onto (2,4): checkpoints are
     device-count agnostic (elastic scaling)."""
@@ -191,7 +193,8 @@ def test_elastic_remesh_subprocess():
             _, restored, _ = mgr.restore(params)
             placed = jax.tree_util.tree_map(jax.device_put, restored, specs)
             batch = {'tokens': jnp.zeros((4, 8), jnp.int32)}
-            with jax.set_mesh(mesh):
+            from repro.launch.mesh import set_mesh
+            with set_mesh(mesh):
                 logits = jax.jit(lambda p, b: M.forward(cfg, p, b))(placed, batch)
             assert logits.shape == (4, 8, cfg.vocab)
             print('mesh', shape, 'ok')
