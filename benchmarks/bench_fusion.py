@@ -1,0 +1,192 @@
+"""Microbenchmark for canonical-form re-fusion (PR-2 tentpole).
+
+Workload: a CLOUDSC-style elementwise chain — K dependent stages over one
+(rows, cols) field.  After maximal fission each stage is its own atomic
+nest; without re-fusion the compiled program is K kernels making K full
+passes over memory with materialized intermediates.  ``FusionPass`` merges
+the chain back into one canonical nest -> one kernel.
+
+Three measurements (CSV rows + optional JSON for the CI artifact):
+
+  * fusion_unfused_kernels — one jitted callable per canonical nest,
+                             dispatched in sequence (the kernel-per-nest
+                             execution model: K dispatches, K memory round
+                             trips through materialized intermediates)
+  * fusion_unfused_one_jit — the unfused program under a single jit (XLA
+                             may re-fuse internally; recorded for honesty)
+  * fusion_fused           — the FusionPass program: one kernel
+
+Correctness gate: both pipelines' outputs are checked bit-identical to the
+``execute_numpy`` float64 oracle at a reduced size before timing.  The CLI
+exits non-zero when the fused/unfused-kernels speedup drops below 1.5x.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+import jax
+
+from repro.core import (
+    Array,
+    Computation,
+    Loop,
+    Program,
+    Schedule,
+    acc,
+    compile_jax,
+    execute_numpy,
+    optimization_pipeline,
+)
+from repro.core.passes import PassContext
+from repro.core.scheduler import nest_program, random_inputs
+from repro.core.util import time_fn
+
+from .common import emit
+
+STAGES = 6
+
+
+def chain_program(rows: int, cols: int, stages: int = STAGES,
+                  name: str = "elementwise_chain") -> Program:
+    """K dependent elementwise stages: T_s = f_s(T_{s-1}) over (rows, cols).
+
+    Intermediates are declared as plain arrays (not temps) so the unfused
+    kernel-per-nest execution model can thread them between kernels exactly
+    as a runtime would — materialized in memory.
+    """
+    arrays = [Array("X", (rows, cols))]
+    body = []
+    prev = "X"
+    for s in range(stages):
+        nm = f"T{s}"
+        arrays.append(Array(nm, (rows, cols)))
+        i, j = f"i{s}", f"j{s}"
+        comp = Computation(
+            f"stage{s}",
+            acc(nm, i, j),
+            (acc(prev, i, j),),
+            # cheap mul-add keeps the chain memory-bound (the fusion win)
+            lambda v, s=s: v * (1.0 + 0.125 * s) + 0.25,
+        )
+        body.append(Loop(i, rows, body=(Loop(j, cols, body=(comp,)),)))
+        prev = nm
+    return Program(name, tuple(arrays), tuple(body))
+
+
+def _written(nest) -> list[str]:
+    from repro.core.codegen import _written_arrays
+
+    return _written_arrays(nest)
+
+
+def _per_kernel_fns(program: Program, sched: Schedule):
+    """One jitted callable per canonical nest (kernel-per-nest execution).
+
+    Each kernel returns exactly the arrays its nest writes — the
+    materialized intermediate the next kernel reads back from memory.
+    """
+    fns = []
+    for nest in program.body:
+        nprog = nest_program(program, nest)
+        writes = _written(nest)
+        body = compile_jax(nprog, sched)
+        fn = jax.jit(lambda a, _b=body, _w=writes: {k: _b(a)[k] for k in _w})
+        fns.append((nprog.array_names, fn))
+    return fns
+
+
+def _run_kernels(fns, env: dict) -> dict:
+    env = dict(env)
+    for names, fn in fns:
+        out = fn({k: env[k] for k in names})
+        env.update(out)
+    return env
+
+
+def _single_kernel_fn(program: Program, sched: Schedule, final: str):
+    """The whole program as one kernel returning only the final stage —
+    XLA is free to keep every fused intermediate in registers."""
+    body = compile_jax(program, sched)
+    return jax.jit(lambda a: {final: body(a)[final]})
+
+
+def run(repeats: int = 5, json_path: str | None = None,
+        rows: int = 1024, cols: int = 2048, stages: int = STAGES) -> dict:
+    prog = chain_program(rows, cols, stages)
+    fuse_pipe = optimization_pipeline(fuse=True)
+    norm_pipe = optimization_pipeline(fuse=False)
+
+    ctx = PassContext()
+    fused = fuse_pipe.run(prog, ctx=ctx)
+    unfused = norm_pipe.run(prog)
+    assert len(fused.body) < len(unfused.body), "fusion merged nothing"
+
+    # correctness gate at a reduced size: bit-identical to the oracle
+    small = chain_program(8, 16, stages)
+    sinp = random_inputs(small, dtype=np.float64)
+    ref = execute_numpy(small, sinp)
+    for variant in (fuse_pipe.run(small), norm_pipe.run(small)):
+        got = execute_numpy(variant, sinp)
+        for k in small.array_names:
+            assert np.array_equal(got[k], ref[k]), (variant.name, k)
+
+    sched = Schedule(mode="canonical", use_idioms=False)
+    inputs = random_inputs(prog)
+    args = {k: np.asarray(v, np.float32) for k, v in inputs.items()}
+
+    final = f"T{stages - 1}"
+    kernel_fns = _per_kernel_fns(unfused, sched)
+    unfused_kernels_us = time_fn(lambda: _run_kernels(kernel_fns, args),
+                                 repeats=repeats)
+    one_jit = _single_kernel_fn(unfused, sched, final)
+    unfused_one_jit_us = time_fn(lambda: one_jit(args), repeats=repeats)
+    fused_fn = _single_kernel_fn(fused, sched, final)
+    fused_us = time_fn(lambda: fused_fn(args), repeats=repeats)
+
+    speedup = unfused_kernels_us / max(fused_us, 1e-9)
+    emit("fusion_unfused_kernels", unfused_kernels_us,
+         f"kernels={len(unfused.body)}")
+    emit("fusion_unfused_one_jit", unfused_one_jit_us)
+    emit("fusion_fused", fused_us,
+         f"kernels={len(fused.body)},speedup={speedup:.2f}x")
+
+    results = {
+        "rows": rows, "cols": cols, "stages": stages,
+        "kernels_unfused": len(unfused.body),
+        "kernels_fused": len(fused.body),
+        "nests_merged": ctx.stat("fusion", "fused"),
+        "unfused_kernels_us": unfused_kernels_us,
+        "unfused_one_jit_us": unfused_one_jit_us,
+        "fused_us": fused_us,
+        "speedup": speedup,
+        "speedup_ok": bool(speedup >= 1.5),
+        "pass_seconds": {r.name: r.seconds for r in ctx.records},
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=1)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--rows", type=int, default=1024)
+    ap.add_argument("--cols", type=int, default=2048)
+    ap.add_argument("--stages", type=int, default=STAGES)
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    results = run(repeats=args.repeats, json_path=args.json,
+                  rows=args.rows, cols=args.cols, stages=args.stages)
+    if not results["speedup_ok"]:
+        raise SystemExit(
+            f"fused speedup {results['speedup']:.2f}x < 1.5x over kernel-per-nest"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,7 @@ for nest in norm.body:
 
 # -- 3. schedule through daisy (idiom detection + transfer tuning) -----------
 daisy = Daisy()
+print(daisy.explain(prog).report())       # per-pass wall time + nest deltas
 daisy.seed([prog], search=False)          # seed the database from this program
 fn, plan = daisy.compile(prog)            # normalize -> DB lookup -> lower
 for p in plan.nests:

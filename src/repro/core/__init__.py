@@ -2,9 +2,11 @@
 
 Public API:
     ir          — the affine loop-nest IR (Program/Loop/Computation/Access)
+    passes      — the compiler pass pipeline (Pass/PassPipeline/PassContext)
     normalize   — maximal loop fission + stride minimization (paper §2)
+    fusion      — canonical-form re-fusion of adjacent elementwise nests
     codegen     — executable lowerings (numpy oracle, as-written, canonical)
-    scheduler   — Daisy: normalize -> idioms -> transfer-tune -> compile
+    scheduler   — Daisy: pipeline -> idioms -> transfer-tune -> compile
 """
 from .ir import (  # noqa: F401
     Access,
@@ -18,7 +20,21 @@ from .ir import (  # noqa: F401
     fingerprint,
     program_fingerprint,
 )
-from .normalize import maximal_fission, normalize, stride_minimization  # noqa: F401
+from .passes import (  # noqa: F401
+    FixpointPass,
+    FunctionPass,
+    Pass,
+    PassContext,
+    PassPipeline,
+    PassRecord,
+)
+from .normalize import (  # noqa: F401
+    maximal_fission,
+    normalization_pipeline,
+    normalize,
+    stride_minimization,
+)
+from .fusion import FusionPass, fuse_program, optimization_pipeline  # noqa: F401
 from .codegen import Schedule, compile_jax, execute_numpy, run_jax  # noqa: F401
 from .cache import CacheStats, CompilationCache, fingerprint_obj  # noqa: F401
 from .database import TuningDatabase  # noqa: F401

@@ -297,10 +297,36 @@ class _NestEmitter:
             val = val + c * self._iter_value(it, axes, seq_env)
         return val
 
+    def _fast_read(self, a: Access, arr, axes: list[_VecAxis]):
+        """Direct (possibly transposed) array view when every dim of ``a`` is
+        a distinct full-range vectorized axis — avoids materializing iota
+        index grids and a gather per access, which XLA fuses far worse than
+        the plain transpose+reshape this emits (dominant for re-fused
+        elementwise chains)."""
+        its = _single_iter_dims(a)
+        if its is None or len(its) != arr.ndim or len(set(its)) != len(its):
+            return None
+        axis_of = {ax.iterator: k for k, ax in enumerate(axes)}
+        if not all(it in axis_of for it in its):
+            return None
+        for d, it in enumerate(its):
+            ax = axes[axis_of[it]]
+            if not (ax.start == 0 and ax.step == 1 and ax.trip == arr.shape[d]):
+                return None
+        order = sorted(range(arr.ndim), key=lambda d: axis_of[its[d]])
+        out = jnp.transpose(arr, order) if order != list(range(arr.ndim)) else arr
+        shape = [1] * len(axes)
+        for d, it in enumerate(its):
+            shape[axis_of[it]] = arr.shape[d]
+        return out.reshape(shape)
+
     def _gather(self, a: Access, env, axes, seq_env):
         arr = env[a.array]
         if not a.index:
             return arr
+        fast = self._fast_read(a, arr, axes)
+        if fast is not None:
+            return fast
         idx = tuple(self._eval_affine(ix, axes, seq_env) for ix in a.index)
         if all(np.isscalar(i) or (hasattr(i, "ndim") and i.ndim == 0) for i in idx):
             return arr[idx]
@@ -495,16 +521,23 @@ def _combine(acc: str, a, b):
 # ---------------------------------------------------------------------------
 def compile_jax(
     program: Program,
-    schedule: Schedule,
-    per_nest: Sequence[Schedule] | None = None,
+    per_nest: Schedule | Sequence[Schedule] = Schedule(),
 ) -> Callable[[Mapping[str, Any]], dict[str, Any]]:
     """Build a jit-able fn: {array: value} -> {array: value} (updated).
 
-    ``per_nest`` optionally overrides the schedule for each top-level nest
-    (the daisy scheduler resolves one recipe per canonical nest).
+    ``per_nest`` is one ``Schedule`` per top-level nest (the daisy scheduler
+    resolves one recipe per canonical nest); a single ``Schedule`` is
+    broadcast to every nest.
     """
-    if per_nest is not None:
-        assert len(per_nest) == len(program.body)
+    if isinstance(per_nest, Schedule):
+        schedules: Sequence[Schedule] = (per_nest,) * len(program.body)
+    else:
+        schedules = tuple(per_nest)
+        if len(schedules) != len(program.body):
+            raise ValueError(
+                f"{program.name}: got {len(schedules)} schedules for "
+                f"{len(program.body)} top-level nests"
+            )
 
     def fn(inputs: Mapping[str, Any]) -> dict[str, Any]:
         env = {
@@ -515,14 +548,18 @@ def compile_jax(
             )
             for a in program.arrays
         }
-        for k, nest in enumerate(program.body):
-            em = _NestEmitter(program, per_nest[k] if per_nest else schedule)
+        for nest, sched in zip(program.body, schedules):
+            em = _NestEmitter(program, sched)
             env = em.emit(nest, env)
         return env
 
     return fn
 
 
-def run_jax(program: Program, inputs: Mapping[str, Any], schedule: Schedule | None = None):
-    sched = schedule or Schedule()
+def run_jax(
+    program: Program,
+    inputs: Mapping[str, Any],
+    per_nest: Schedule | Sequence[Schedule] | None = None,
+):
+    sched = per_nest if per_nest is not None else Schedule()
     return jax.jit(compile_jax(program, sched))(dict(inputs))

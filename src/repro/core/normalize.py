@@ -13,13 +13,16 @@ computations and accesses of the address distance between two subsequent
 iterators are permuted exhaustively; deeper nests fall back to the paper's
 group-sort approximation (order iterators by descending stride weight).
 
-``normalize`` = fission → stride-minimization → canonical iterator renaming.
+``normalize`` = fission → stride-minimization → canonical iterator renaming,
+run as the canonical ``PassPipeline`` built by ``normalization_pipeline()``
+(the scheduler extends the same pipeline with post-normalization
+optimization passes such as re-fusion — see ``repro.core.fusion``).
 """
 from __future__ import annotations
 
 import itertools
 from dataclasses import replace
-from typing import Sequence
+from typing import Mapping, Sequence
 
 from .dependence import (
     DepVector,
@@ -41,6 +44,7 @@ from .ir import (
     nest_computations,
     walk,
 )
+from .passes import FixpointPass, FunctionPass, PassPipeline
 
 MAX_ENUM = 7  # exhaustive permutation bound (7! = 5040)
 
@@ -212,8 +216,28 @@ def access_stride(program: Program, a: Access, iterator: str) -> int:
     return abs(delta)
 
 
+def stride_weights(
+    program: Program, comps: Sequence[Computation], iterators: Sequence[str]
+) -> dict[str, int]:
+    """Per-iterator stride weight: the paper's sum over all (computation,
+    access) pairs of the address delta between consecutive iterations.
+
+    Computed ONCE per nest — a weight depends only on the iterator, never on
+    its position in the loop order, so permutation enumeration can compare
+    cost tuples by reordering these precomputed totals instead of re-walking
+    every access for each of up to 7! candidate permutations.
+    """
+    return {
+        it: sum(access_stride(program, a, it) for c in comps for a in c.accesses())
+        for it in iterators
+    }
+
+
 def stride_cost(
-    program: Program, comps: Sequence[Computation], order: Sequence[str]
+    program: Program,
+    comps: Sequence[Computation],
+    order: Sequence[str],
+    weights: Mapping[str, int] | None = None,
 ) -> tuple[int, ...]:
     """Cost tuple (innermost, ..., outermost): each entry is the paper's
     sum-of-strides criterion for that loop being the vectorized/fast axis.
@@ -221,14 +245,9 @@ def stride_cost(
     Comparing the tuples lexicographically implements "minimize the stride of
     subsequent accesses" with deterministic tie-breaking on outer levels.
     """
-    costs = []
-    for it in reversed(order):
-        total = 0
-        for c in comps:
-            for a in c.accesses():
-                total += access_stride(program, a, it)
-        costs.append(total)
-    return tuple(costs)
+    if weights is None:
+        weights = stride_weights(program, comps, order)
+    return tuple(weights[it] for it in reversed(order))
 
 
 def _legal_orders(
@@ -243,17 +262,14 @@ def _legal_orders(
 
 
 def _greedy_order(
-    program: Program, comps: Sequence[Computation], iterators: Sequence[str],
+    iterators: Sequence[str],
     vectors: Sequence[DepVector],
+    weights: Mapping[str, int],
 ) -> tuple[int, ...]:
     """Deep-nest approximation (paper §2.2): sort iterators by descending
     stride weight (largest stride outermost), keeping only legal placements.
     """
-    weight = {
-        it: sum(access_stride(program, a, it) for c in comps for a in c.accesses())
-        for it in iterators
-    }
-    desired = sorted(range(len(iterators)), key=lambda k: (-weight[iterators[k]], k))
+    desired = sorted(range(len(iterators)), key=lambda k: (-weights[iterators[k]], k))
     # insertion repair: greedily build a legal prefix
     chosen: list[int] = []
     remaining = list(desired)
@@ -285,6 +301,8 @@ def _permute_perfect_nest(program: Program, root: Loop) -> Loop:
 
     if len(chain) <= 1:
         return root
+    # one access walk per nest; enumeration below only reorders these totals
+    weights = stride_weights(program, comps, iterators)
     if len(chain) <= MAX_ENUM:
         orders = _legal_orders(iterators, vectors)
         if not orders:
@@ -294,10 +312,12 @@ def _permute_perfect_nest(program: Program, root: Loop) -> Loop:
             orders = [tuple(range(len(iterators)))]
         best = min(
             orders,
-            key=lambda p: (stride_cost(program, comps, [iterators[k] for k in p]), p),
+            key=lambda p: (
+                stride_cost(program, comps, [iterators[k] for k in p], weights), p
+            ),
         )
     else:
-        best = _greedy_order(program, comps, iterators, vectors)
+        best = _greedy_order(iterators, vectors, weights)
 
     # rebuild the chain in the chosen order
     body = innermost.body
@@ -343,13 +363,27 @@ def canonical_rename(program: Program) -> Program:
     return replace(program, body=tuple(ren(n) for n in program.body))
 
 
+def normalization_pipeline() -> PassPipeline:
+    """The a priori normalization passes (paper Fig. 5) as an explicit,
+    editable pipeline.  Fission runs to a fixed point (each application only
+    ever splits further); canonical renaming is last so fingerprints are
+    stable under whatever passes are inserted before it."""
+    return PassPipeline(
+        [
+            FunctionPass("scalar_expansion", scalar_expansion),
+            FixpointPass("maximal_fission", maximal_fission),
+            FunctionPass("stride_minimization", stride_minimization),
+            FunctionPass("canonical_rename", canonical_rename),
+        ],
+        name="normalize",
+    )
+
+
+# the canonical instance `normalize()` runs (tools may inspect/extend it via
+# `normalization_pipeline()` without touching this shared one)
+NORMALIZE_PIPELINE = normalization_pipeline()
+
+
 def normalize(program: Program) -> Program:
     """The full a priori normalization pipeline (paper Fig. 5)."""
-    cur = scalar_expansion(program)
-    prev = None
-    # fission is a fixed point (each application only splits further)
-    while prev is None or cur.body != prev.body:
-        prev = cur
-        cur = maximal_fission(cur)
-    cur = stride_minimization(cur)
-    return canonical_rename(cur)
+    return NORMALIZE_PIPELINE.run(program)

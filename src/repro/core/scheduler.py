@@ -1,7 +1,11 @@
 """daisy — the normalized auto-scheduler (paper §4).
 
 Pipeline per program:
-  1. a priori normalization (maximal fission + stride minimization),
+  1. the compiler pass pipeline (``repro.core.passes``): a priori
+     normalization (scalar expansion, maximal fission, stride
+     minimization) followed by canonical-form re-fusion
+     (``repro.core.fusion``) and canonical renaming — each stage
+     individually timed and content-addressed in the compilation cache,
   2. per canonical nest: idiom detection,
   3. recipe resolution against the transfer-tuning database
      (exact fingerprint -> embedding nearest-neighbour -> idiom default),
@@ -21,9 +25,10 @@ import jax
 import numpy as np
 
 from .cache import CacheStats, CompilationCache
-from .codegen import Schedule, compile_jax
+from .codegen import compile_jax
 from .database import TuningDatabase
 from .embedding import embed_nest
+from .fusion import optimization_pipeline
 from .idioms import classify_nest
 from .ir import (
     Array,
@@ -35,7 +40,7 @@ from .ir import (
     program_fingerprint,
     walk,
 )
-from .normalize import normalize
+from .passes import PassContext
 from .recipes import Recipe
 from .search import default_recipe_for, evolve_recipe, measure_recipe, schedule_from_recipe
 
@@ -95,10 +100,16 @@ class Daisy:
         db: TuningDatabase | None = None,
         interpret: bool = True,
         cache: CompilationCache | None = None,
+        fuse: bool = True,
     ):
         self.db = db if db is not None else TuningDatabase()
         self.interpret = interpret
-        # Content-addressed memo for the normalize -> plan -> compile chain.
+        self.fuse = fuse
+        # The compiler pass pipeline: a priori normalization + canonical-form
+        # re-fusion.  Shared by plan/compile/seed so database fingerprints
+        # always refer to the same canonical form.
+        self.pipeline = optimization_pipeline(fuse=fuse)
+        # Content-addressed memo for the pipeline -> plan -> compile chain.
         # Keys include the database generation, so seeding new recipes
         # expires stale plans while normalized programs stay cached.
         self.cache = cache if cache is not None else CompilationCache()
@@ -109,15 +120,28 @@ class Daisy:
 
     # -- caching --------------------------------------------------------------
     def _normalized(self, program: Program, fp: str | None = None) -> Program:
-        key = ("normalize", fp or program_fingerprint(program))
-        return self.cache.get_or_build(key, lambda: normalize(program))
+        # Whole-pipeline memo first (one lookup on the hot path); on a miss
+        # the pipeline run itself memoizes per stage, so programs converging
+        # onto the same intermediate form share all downstream stage work.
+        key = ("pipeline", self.pipeline.name, fp or program_fingerprint(program))
+        return self.cache.get_or_build(
+            key, lambda: self.pipeline.run(program, cache=self.cache)
+        )
+
+    def explain(self, program: Program, snapshots: bool = False) -> PassContext:
+        """Run the pass pipeline uncached, returning the per-pass context
+        (wall time, nest/computation deltas, fusion stats, IR snapshots)."""
+        ctx = PassContext(snapshots=snapshots)
+        self.pipeline.run(program, ctx=ctx)
+        return ctx
 
     def _plan_key(self, fp: str, normalize_first: bool) -> tuple:
         # id(db) scopes entries to the database instance (self.db keeps it
         # alive), so Daisy objects sharing one CompilationCache but holding
         # different databases never exchange plans; generation expires plans
         # resolved against older contents of the *same* database.
-        return (fp, normalize_first, self.interpret, id(self.db), self.db.generation)
+        return (fp, normalize_first, self.fuse, self.interpret,
+                id(self.db), self.db.generation)
 
     # -- planning -------------------------------------------------------------
     def plan(
@@ -154,7 +178,7 @@ class Daisy:
             return cached
         plan = self.plan(program, normalize_first=normalize_first, _fp=fp)
         per_nest = [schedule_from_recipe(np_.recipe, self.interpret) for np_ in plan.nests]
-        fn = compile_jax(plan.program, per_nest[0] if per_nest else Schedule(), per_nest or None)
+        fn = compile_jax(plan.program, per_nest)
         result = ((jax.jit(fn) if jit else fn), plan)
         self.cache.put(key, result)
         return result
@@ -167,7 +191,7 @@ class Daisy:
         search_iterations: int = 2,
         verbose: bool = False,
     ) -> None:
-        pending: list[tuple[str, np.ndarray, Program, Recipe]] = []
+        pending: list[tuple[str, np.ndarray, Program, dict[str, np.ndarray], Recipe]] = []
         for prog in programs:
             p = self._normalized(prog)
             for nest in p.body:
@@ -177,21 +201,25 @@ class Daisy:
                 emb = embed_nest(p, nest)
                 idiom = classify_nest(nest)
                 seed_recipe = default_recipe_for(idiom)
+                # one standalone program + one input set per nest, reused by
+                # every measurement epoch below
+                nprog = nest_program(p, nest)
+                inputs = random_inputs(nprog)
                 if idiom.kind in ("blas3",):
                     # BLAS-3: straight to the library-call recipe (paper §4)
-                    t = measure_recipe(nest_program(p, nest), random_inputs(nest_program(p, nest)), seed_recipe)
+                    t = measure_recipe(nprog, inputs, seed_recipe)
                     self.db.add(fp, emb, seed_recipe, provenance=f"{prog.name}:idiom", measured_us=t)
                     continue
-                pending.append((fp, emb, nest_program(p, nest), seed_recipe))
+                pending.append((fp, emb, nprog, inputs, seed_recipe))
 
         # epoch 1: evolutionary search per nest
         results: list[tuple[str, np.ndarray, Recipe, float]] = []
-        for fp, emb, nprog, seed_recipe in pending:
+        for fp, emb, nprog, inputs, seed_recipe in pending:
             if search:
-                best, t = evolve_recipe(nprog, random_inputs(nprog), seed_recipe,
+                best, t = evolve_recipe(nprog, inputs, seed_recipe,
                                         iterations=search_iterations)
             else:
-                best, t = seed_recipe, measure_recipe(nprog, random_inputs(nprog), seed_recipe)
+                best, t = seed_recipe, measure_recipe(nprog, inputs, seed_recipe)
             results.append((fp, emb, best, t))
             if verbose:
                 print(f"  seeded {fp[:60]} -> {best.kind} ({t:.0f}us)")
@@ -200,10 +228,10 @@ class Daisy:
         for fp, emb, best, t in results:
             self.db.add(fp, emb, best, provenance="search", measured_us=t)
         if search:
-            for fp, emb, nprog, _ in pending:
+            for fp, emb, nprog, inputs, _ in pending:
                 near = self.db.lookup_nearest(emb, k=10)
                 pool = [e.recipe for _, e in near]
                 cur = self.db.lookup_exact(fp)
-                best, t = evolve_recipe(nprog, random_inputs(nprog), cur,
+                best, t = evolve_recipe(nprog, inputs, cur,
                                         iterations=1, reseed_pool=pool)
                 self.db.add(fp, emb, best, provenance="search+transfer", measured_us=t)

@@ -80,14 +80,21 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
     return out
 
 
+# Bump whenever the cell record gains/changes fields, so JSONs written by an
+# older revision are recomputed instead of skip-cached without the new data
+# (v2: kernel_plans from the compiler pass pipeline).
+_RECORD_SCHEMA = 2
+
+
 def cell_cache_key(arch: str, shape_name: str, multi_pod: bool,
                    fsdp: bool = True, variant: str = "base") -> str:
-    """Content address of one dry-run cell: the full config, shape, mesh and
-    jax version.  A cached JSON whose key differs (config edit, toolchain
-    bump) is recomputed instead of silently served stale."""
+    """Content address of one dry-run cell: the full config, shape, mesh,
+    jax version and record schema.  A cached JSON whose key differs (config
+    edit, toolchain bump, schema change) is recomputed instead of silently
+    served stale."""
     return fingerprint_obj(
         get_config(arch), SHAPES[shape_name], multi_pod, fsdp, variant,
-        jax.__version__,
+        jax.__version__, _RECORD_SCHEMA,
     )
 
 
@@ -125,7 +132,8 @@ def _with_shardings(struct_tree, spec_tree):
 
 
 def lower_cell(arch: str, shape_name: str, multi_pod: bool, opt_cfg=None,
-               fsdp: bool = True, variant: str = "base") -> dict:
+               fsdp: bool = True, variant: str = "base",
+               explain: bool = False) -> dict:
     """variant: 'base' | 'dp_only' (no TP: params replicated, batch over all
     axes) | 'seq_parallel' (Megatron SP) | 'save_moe' (keep MoE dispatch
     across the backward) — the §Perf hillclimb knobs."""
@@ -238,6 +246,24 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, opt_cfg=None,
     rec["collective_bytes"] = coll
     rec["collective_total"] = int(sum(coll.values()))
     rec["n_devices"] = int(mesh.devices.size)
+
+    # kernel plans from the compiler pass pipeline: which idiom/recipe each
+    # per-layer contraction resolves to at this cell's shape (content-keyed
+    # memo: cells differing only in mesh/variant share one pipeline run)
+    from ..core.cache import jit_cache
+    from ..models.lowering import kernel_report, plan_model
+
+    plans = jit_cache.get_or_build(
+        ("dryrun.plans", fingerprint_obj(cfg, shape.seq_len, shape.global_batch)),
+        lambda: plan_model(cfg, shape.seq_len, shape.global_batch),
+    )
+    rec["kernel_plans"] = [
+        {"name": p.name, "mnk": list(p.mnk), "idiom": p.idiom,
+         "recipe": p.recipe.kind, "source": p.source, "mesh_axis": p.mesh_axis}
+        for p in plans
+    ]
+    if explain:
+        print(kernel_report(cfg, shape.seq_len, shape.global_batch, plans=plans))
     return rec
 
 
@@ -248,6 +274,8 @@ def main() -> None:
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--sharding", default="fsdp", choices=["fsdp", "tp"])
     ap.add_argument("--out", default="dryrun_out")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the per-pass pipeline report for each cell")
     args = ap.parse_args()
 
     archs = list(ARCHS) if args.arch == "all" else [args.arch]
@@ -274,7 +302,8 @@ def main() -> None:
                     print(f"[stale-cache] {tag}: recomputing")
                 print(f"[lower] {tag}", flush=True)
                 try:
-                    rec = lower_cell(arch, shape, mp, fsdp=args.sharding == "fsdp")
+                    rec = lower_cell(arch, shape, mp, fsdp=args.sharding == "fsdp",
+                                     explain=args.explain)
                 except Exception as e:  # a failure here is a bug in the system
                     traceback.print_exc()
                     rec = {"arch": arch, "shape": shape,

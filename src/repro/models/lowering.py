@@ -24,10 +24,17 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core.database import TuningDatabase
 from ..core.embedding import embed_nest
+from ..core.fusion import optimization_pipeline
 from ..core.idioms import classify_nest
 from ..core.ir import Array, Computation, Loop, Program, acc, fingerprint
-from ..core.normalize import normalize
+from ..core.passes import PassContext
 from ..core.recipes import GEMM_TILE_PRESETS, Recipe
+
+# The same pass pipeline the daisy scheduler runs (normalization +
+# canonical-form re-fusion); single-contraction programs pass through the
+# fusion stage untouched (blas3 nests stay standalone library calls), but
+# sharing the instance keeps model fingerprints aligned with Daisy's.
+PIPELINE = optimization_pipeline(fuse=True)
 
 
 def _matmul_program(name: str, m: int, n: int, k: int, order=("i", "j", "k")) -> Program:
@@ -105,7 +112,7 @@ def seed_model_database(db: TuningDatabase) -> None:
     """Seed the DB with the canonical GEMM recipe (fingerprint-generic via
     the embedding metric: every model contraction normalizes to this family)."""
     probe = _matmul_program("canonical_gemm", 1024, 1024, 1024)
-    norm = normalize(probe)
+    norm = PIPELINE.run(probe)
     nest = norm.body[0]
     db.add(
         fingerprint(nest),
@@ -124,7 +131,7 @@ def plan_model(cfg: ModelConfig, seq: int, batch: int, db: TuningDatabase | None
         # author the nest in an arbitrary (developer-chosen) order; the
         # normalizer canonicalizes it before the DB lookup
         order = ("k", "i", "j") if hash(name) % 2 else ("i", "j", "k")
-        prog = normalize(_matmul_program(name, m, n, k, order))
+        prog = PIPELINE.run(_matmul_program(name, m, n, k, order))
         nest = prog.body[0]
         fp = fingerprint(nest)
         emb = embed_nest(prog, nest)
@@ -140,3 +147,37 @@ def plan_model(cfg: ModelConfig, seq: int, batch: int, db: TuningDatabase | None
         )
         plans.append(ContractionPlan(name, (m, n, k), fp, idiom.kind, recipe, source, mesh_axis))
     return plans
+
+
+def kernel_report(cfg: ModelConfig, seq: int, batch: int,
+                  db: TuningDatabase | None = None,
+                  plans: list[ContractionPlan] | None = None) -> str:
+    """Human-readable pass-pipeline + per-contraction plan report.
+
+    Rendered by the serving engine / trainer ``explain_kernels`` hooks and
+    the dry-run driver: one per-pass table for the largest contraction (they
+    all walk the same pipeline) plus one plan row per contraction.  Callers
+    that already ran ``plan_model`` pass its result via ``plans``.
+    """
+    if plans is None:
+        plans = plan_model(cfg, seq, batch, db=db)
+    name, (m, n, k) = max(
+        model_contractions(cfg, seq, batch).items(),
+        key=lambda kv: kv[1][0] * kv[1][1] * kv[1][2],
+    )
+    ctx = PassContext()
+    PIPELINE.run(_matmul_program(name, m, n, k), ctx=ctx)
+    lines = [
+        f"pass pipeline ({PIPELINE.name}) on {name} [{m}x{n}x{k}]:",
+        ctx.report(),
+        "",
+        "contraction plans:",
+    ]
+    for p in plans:
+        m, n, k = p.mnk
+        lines.append(
+            f"  {p.name:<16} {m:>8}x{n:<8}x{k:<6} idiom={p.idiom} "
+            f"recipe={p.recipe.kind}{f' tile={p.recipe.tile}' if p.recipe.tile else ''} "
+            f"source={p.source} axis={p.mesh_axis}"
+        )
+    return "\n".join(lines)

@@ -63,6 +63,20 @@ class ServingEngine:
     def submit(self, rid: int, prompt: np.ndarray) -> None:
         self.queue.append(Request(rid, np.asarray(prompt, np.int32)))
 
+    def explain_kernels(self) -> str:
+        """Pass-pipeline + contraction-plan report for this engine's config
+        at its serving shape (ops introspection; content-cached so repeated
+        calls and re-created engines share one pipeline run)."""
+        from ..models.lowering import kernel_report
+
+        return jit_cache.get_or_build(
+            ("serve.kernel_report",
+             fingerprint_obj(self.cfg, self.scfg.max_len, self.scfg.batch_slots)),
+            lambda: kernel_report(
+                self.cfg, seq=self.scfg.max_len, batch=self.scfg.batch_slots
+            ),
+        )
+
     # -- internals -------------------------------------------------------------
     def _prefill_one(self, req: Request, state_b1) -> Any:
         """Prefill a single request's row into a fresh (1, ...) state."""

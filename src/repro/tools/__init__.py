@@ -1,0 +1,1 @@
+"""Developer tools: pass-pipeline introspection CLIs."""

@@ -148,6 +148,20 @@ class Trainer:
         self.step = 0
         self.history: list[dict] = []
 
+    def explain_kernels(self) -> str:
+        """Pass-pipeline + contraction-plan report at this trainer's data
+        shape (content-cached: restarted trainers share one pipeline run)."""
+        from ..models.lowering import kernel_report
+
+        dcfg = self.data.cfg
+        return jit_cache.get_or_build(
+            ("train.kernel_report",
+             fingerprint_obj(self.cfg, dcfg.seq_len, dcfg.global_batch)),
+            lambda: kernel_report(
+                self.cfg, seq=dcfg.seq_len, batch=dcfg.global_batch
+            ),
+        )
+
     # -- checkpoint plumbing --------------------------------------------------
     def _tree(self):
         return {"params": self.params, "opt": self.opt_state}

@@ -1,0 +1,182 @@
+"""Canonical-form re-fusion: legality, idiom guards, oracle equivalence."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Array,
+    Computation,
+    Loop,
+    PassContext,
+    Program,
+    Schedule,
+    acc,
+    aff,
+    execute_numpy,
+    fuse_program,
+    normalize,
+    optimization_pipeline,
+    run_jax,
+)
+from repro.core.fusion import domains_match, fusion_legal
+from repro.core.scheduler import random_inputs
+from repro.polybench import BENCHMARKS, NAMES
+
+
+def elementwise_chain(n=12, stages=5):
+    """stages dependent elementwise nests T_s = f_s(T_{s-1})."""
+    arrays = [Array("X", (n,))]
+    body = []
+    prev = "X"
+    for s in range(stages):
+        nm = f"T{s}"
+        arrays.append(Array(nm, (n,)))
+        it = f"i{s}"
+        body.append(Loop(it, n, body=(
+            Computation(f"c{s}", acc(nm, it), (acc(prev, it),),
+                        lambda v, s=s: v * 0.5 + s),
+        )))
+        prev = nm
+    return Program("chain", tuple(arrays), tuple(body))
+
+
+def two_nests(read_offset=0, n2=8):
+    """producer A[i] = X[i]; consumer B[j] = A[j + read_offset]."""
+    p = Loop("i", 8, body=(
+        Computation("prod", acc("A", "i"), (acc("X", "i"),), lambda x: x + 1.0),
+    ))
+    c = Loop("j", n2, body=(
+        Computation("cons", acc("B", "j"),
+                    (acc("A", aff("j", const=read_offset)),), lambda a: a * 2.0,
+                    guards=(aff("j", const=-max(0, -read_offset)),) if read_offset < 0 else
+                           ((aff(("j", -1), const=7 - read_offset),) if read_offset > 0 else ())),
+    ))
+    return Program(
+        "pc", (Array("X", (8,)), Array("A", (8,)), Array("B", (max(8, n2),))), (p, c)
+    )
+
+
+class TestLegality:
+    def test_same_iteration_dependence_fuses(self):
+        prog = two_nests(read_offset=0)
+        assert fusion_legal(prog.body[0], prog.body[1])
+        fused = fuse_program(prog)
+        assert len(fused.body) == 1
+
+    def test_forward_carried_dependence_fuses(self):
+        # consumer reads A[j-1]: producer instance runs strictly earlier
+        prog = two_nests(read_offset=-1)
+        assert fusion_legal(prog.body[0], prog.body[1])
+
+    def test_backward_dependence_rejected(self):
+        # consumer reads A[j+1]: would need a producer instance that has not
+        # run yet at fused iteration j -> fusion-preventing dependence
+        prog = two_nests(read_offset=1)
+        assert not fusion_legal(prog.body[0], prog.body[1])
+        ctx = PassContext()
+        optimization_pipeline(fuse=True).run(prog, ctx=ctx)
+        assert ctx.stat("fusion", "dependence_blocked", 0) >= 1
+
+    def test_domain_mismatch_rejected(self):
+        prog = two_nests(read_offset=0, n2=6)  # consumer trips 6 != 8
+        assert not domains_match(prog.body[0], prog.body[1])
+        assert not fusion_legal(prog.body[0], prog.body[1])
+        fused = fuse_program(prog)
+        assert len(fused.body) == 2
+
+    def test_oracle_equivalence_of_legal_fusions(self):
+        for off in (0, -1):
+            prog = two_nests(read_offset=off)
+            fused = fuse_program(prog)
+            assert len(fused.body) == 1
+            inp = random_inputs(prog, dtype=np.float64)
+            ref = execute_numpy(prog, inp)
+            got = execute_numpy(fused, inp)
+            for k in prog.array_names:
+                assert np.array_equal(ref[k], got[k]), (off, k)
+
+
+class TestIdiomGuards:
+    def test_blas3_nest_stays_standalone(self):
+        prog = BENCHMARKS["gemm"].make("a", "mini")
+        norm = normalize(prog)
+        ctx = PassContext()
+        fused = optimization_pipeline(fuse=True).run(prog, ctx=ctx)
+        # scale + MAC survive as separate kernels (MAC is the library call)
+        assert len(fused.body) == len(norm.body) == 2
+        from repro.core.idioms import classify_nest
+
+        assert {classify_nest(n).kind for n in fused.body} == {"elementwise", "blas3"}
+
+
+class TestKernelCountReduction:
+    def test_chain_collapses_to_one_kernel(self):
+        """Acceptance: a >=4-stage elementwise chain emits fewer kernels."""
+        prog = elementwise_chain(stages=5)
+        norm = normalize(prog)
+        assert len(norm.body) == 5
+        ctx = PassContext()
+        fused = optimization_pipeline(fuse=True).run(prog, ctx=ctx)
+        assert len(fused.body) == 1
+        assert ctx.stat("fusion", "fused") == 4
+
+    def test_fused_chain_matches_oracle_bit_identical(self):
+        prog = elementwise_chain(stages=5)
+        fused = optimization_pipeline(fuse=True).run(prog)
+        inp = random_inputs(prog, dtype=np.float64)
+        ref = execute_numpy(prog, inp)
+        got = execute_numpy(fused, inp)
+        for k in prog.array_names:
+            assert np.array_equal(ref[k], got[k]), k
+
+    def test_fused_chain_jax_matches_oracle(self):
+        prog = elementwise_chain(stages=5)
+        fused = optimization_pipeline(fuse=True).run(prog)
+        inp = random_inputs(prog, dtype=np.float64)
+        ref = execute_numpy(prog, inp)
+        out = run_jax(fused, inp, Schedule(mode="canonical", use_idioms=False))
+        np.testing.assert_allclose(
+            np.asarray(out["T4"], np.float64), ref["T4"], rtol=1e-5, atol=1e-6
+        )
+
+
+class TestPropertyOracleEquivalence:
+    """Property-style acceptance sweep: FusionPass on vs off must be
+    oracle-equivalent (bit-identical in float64) across the polybench suite
+    and the CLOUDSC erosion scheme."""
+
+    @pytest.mark.parametrize("name", NAMES)
+    @pytest.mark.parametrize("variant", ["a", "b"])
+    def test_polybench_fusion_on_off_equivalent(self, name, variant):
+        b = BENCHMARKS[name]
+        prog = b.make(variant, "mini")
+        inp = random_inputs(prog, seed=7, dtype=np.float64)
+        unfused = optimization_pipeline(fuse=False).run(prog)
+        fused = optimization_pipeline(fuse=True).run(prog)
+        ref = execute_numpy(unfused, inp)
+        got = execute_numpy(fused, inp)
+        assert np.array_equal(ref[b.output], got[b.output], equal_nan=True)
+
+    def test_cloudsc_erosion_fusion_on_off_equivalent(self):
+        from repro.cloudsc import erosion_program
+        from repro.cloudsc.erosion import physical_inputs
+
+        prog = erosion_program(nproma=8, klev=4)
+        inp = physical_inputs(8, 4)
+        ctx = PassContext()
+        fused = optimization_pipeline(fuse=True).run(prog, ctx=ctx)
+        assert ctx.stat("fusion", "fused") > 0  # the scalar chain re-fuses
+        ref = execute_numpy(optimization_pipeline(fuse=False).run(prog), inp)
+        got = execute_numpy(fused, inp)
+        for k in ("ZTP1", "ZQSMIX"):
+            assert np.array_equal(ref[k], got[k]), k
+
+    def test_cloudsc_scheme_fusion_on_off_equivalent(self):
+        from repro.cloudsc import mini_cloudsc_program
+        from repro.cloudsc.scheme import scheme_inputs
+
+        prog = mini_cloudsc_program(nproma=8, klev=5)
+        inp = scheme_inputs(8, 5)
+        ref = execute_numpy(optimization_pipeline(fuse=False).run(prog), inp)
+        got = execute_numpy(optimization_pipeline(fuse=True).run(prog), inp)
+        for k in ("ZTP1", "ZQSMIX", "ZQL", "ZQI", "PFPLSL", "TENDQ"):
+            assert np.array_equal(ref[k], got[k]), k

@@ -1,0 +1,184 @@
+"""The compiler pass pipeline: protocol, context/report, caching, consumers."""
+import numpy as np
+
+from repro.core import (
+    CompilationCache,
+    Daisy,
+    FunctionPass,
+    PassContext,
+    Program,
+    fingerprint,
+    normalization_pipeline,
+    normalize,
+    optimization_pipeline,
+)
+from repro.core.scheduler import random_inputs
+from repro.polybench import BENCHMARKS
+
+
+def _gemm():
+    return BENCHMARKS["gemm"].make("a", "mini")
+
+
+class TestPipelineStructure:
+    def test_normalize_equals_pipeline_run(self):
+        p = _gemm()
+        a = normalize(p)
+        b = normalization_pipeline().run(p)
+        assert [fingerprint(n) for n in a.body] == [fingerprint(n) for n in b.body]
+
+    def test_pass_names_in_order(self):
+        assert normalization_pipeline().names == (
+            "scalar_expansion", "maximal_fission",
+            "stride_minimization", "canonical_rename",
+        )
+        assert optimization_pipeline(fuse=True).names == (
+            "scalar_expansion", "maximal_fission",
+            "stride_minimization", "fusion", "canonical_rename",
+        )
+
+    def test_with_pass_insertion_and_removal(self):
+        pipe = normalization_pipeline()
+        marker = FunctionPass("marker", lambda p: p)
+        assert pipe.with_pass(marker, after="maximal_fission").names[2] == "marker"
+        assert pipe.with_pass(marker, before="maximal_fission").names[1] == "marker"
+        assert pipe.with_pass(marker).names[-1] == "marker"
+        assert "fusion" not in optimization_pipeline().without_pass("fusion").names
+
+    def test_duplicate_pass_name_rejected(self):
+        import pytest
+
+        pipe = normalization_pipeline()
+        with pytest.raises(ValueError):
+            pipe.with_pass(FunctionPass("fusion", lambda p: p)).with_pass(
+                FunctionPass("fusion", lambda p: p)
+            )
+
+
+class TestPassContext:
+    def test_records_timing_and_counts(self):
+        ctx = PassContext()
+        out = normalization_pipeline().run(_gemm(), ctx=ctx)
+        assert [r.name for r in ctx.records] == list(normalization_pipeline().names)
+        assert all(r.seconds >= 0 for r in ctx.records)
+        # gemm_a fissions into scale + MAC nests
+        assert ctx["maximal_fission"].nests_after == len(out.body) == 2
+        assert ctx.stat("maximal_fission", "iterations") >= 1
+        assert ctx.total_seconds == sum(r.seconds for r in ctx.records)
+
+    def test_report_renders_every_pass(self):
+        ctx = PassContext()
+        optimization_pipeline().run(_gemm(), ctx=ctx)
+        report = ctx.report()
+        for name in optimization_pipeline().names:
+            assert name in report
+        assert "fused=" in report
+
+    def test_snapshots_keep_ir(self):
+        ctx = PassContext(snapshots=True)
+        normalization_pipeline().run(_gemm(), ctx=ctx)
+        rec = ctx["stride_minimization"]
+        assert isinstance(rec.before, Program) and isinstance(rec.after, Program)
+        # default context drops the IR
+        ctx2 = PassContext()
+        normalization_pipeline().run(_gemm(), ctx=ctx2)
+        assert ctx2["stride_minimization"].before is None
+
+
+class TestStageCaching:
+    def test_second_run_hits_every_stage(self):
+        cache = CompilationCache()
+        pipe = normalization_pipeline()
+        out1 = pipe.run(_gemm(), cache=cache)
+        ctx = PassContext()
+        out2 = pipe.run(_gemm(), ctx=ctx, cache=cache)
+        assert all(r.cached for r in ctx.records)
+        assert [fingerprint(n) for n in out1.body] == [fingerprint(n) for n in out2.body]
+
+    def test_convergent_programs_share_stage_work(self):
+        """A and B variants converge after fission; downstream stages of B
+        must be served from A's cached stage outputs."""
+        cache = CompilationCache()
+        pipe = normalization_pipeline()
+        pipe.run(BENCHMARKS["gemm"].make("a", "mini"), cache=cache)
+        ctx = PassContext()
+        pipe.run(BENCHMARKS["gemm"].make("b", "mini"), ctx=ctx, cache=cache)
+        assert any(r.cached for r in ctx.records)
+
+
+class TestDaisyIntegration:
+    def test_explain_reports_pipeline(self):
+        d = Daisy()
+        ctx = d.explain(_gemm())
+        assert [r.name for r in ctx.records] == list(d.pipeline.names)
+        assert "fusion" in d.pipeline.names
+        assert "fusion" not in Daisy(fuse=False).pipeline.names
+
+    def test_fuse_flag_scopes_cached_plans(self):
+        cache = CompilationCache()
+        d1 = Daisy(cache=cache, fuse=True)
+        d2 = Daisy(db=d1.db, cache=cache, fuse=False)
+        _, plan1 = d1.compile(_gemm())
+        _, plan2 = d2.compile(_gemm())
+        assert plan1 is not plan2  # fuse flag is part of the plan key
+
+    def test_compile_matches_oracle_with_fusion_on_and_off(self):
+        from repro.core import execute_numpy
+
+        prog = _gemm()
+        inp = random_inputs(prog, seed=11)
+        ref = execute_numpy(prog, {k: v.astype(np.float64) for k, v in inp.items()})
+        for fuse in (True, False):
+            fn, _ = Daisy(fuse=fuse).compile(prog)
+            out = fn(inp)
+            np.testing.assert_allclose(
+                np.asarray(out["C"], np.float64), ref["C"], rtol=1e-3, atol=1e-3
+            )
+
+
+class TestCompileJaxSignature:
+    def test_single_schedule_broadcasts(self):
+        from repro.core import Schedule, compile_jax
+
+        prog = normalize(_gemm())
+        fn = compile_jax(prog, Schedule(mode="canonical", use_idioms=False))
+        inp = random_inputs(prog)
+        out = fn(inp)
+        assert out["C"].shape == prog.array("C").shape
+
+    def test_per_nest_length_mismatch_raises(self):
+        import pytest
+
+        from repro.core import Schedule, compile_jax
+
+        prog = normalize(_gemm())
+        assert len(prog.body) == 2
+        with pytest.raises(ValueError):
+            compile_jax(prog, [Schedule()])
+
+
+class TestModelConsumers:
+    def test_kernel_report_renders(self):
+        from repro.configs import get_config
+        from repro.models.lowering import kernel_report
+
+        rep = kernel_report(get_config("minicpm-2b").reduced(), seq=64, batch=2)
+        assert "pass pipeline" in rep
+        assert "q_proj" in rep and "lm_head" in rep
+        assert "canonical_rename" in rep
+
+    def test_serving_engine_explain_kernels(self):
+        import jax
+
+        from repro.configs import get_config
+        from repro.models import model as M
+        from repro.serve import ServeConfig, ServingEngine
+
+        cfg = get_config("minicpm-2b").reduced()
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        eng = ServingEngine(cfg, params, ServeConfig(max_len=32))
+        rep = eng.explain_kernels()
+        assert "contraction plans:" in rep
+        # content-cached: a re-created engine shares the identical report
+        eng2 = ServingEngine(cfg, params, ServeConfig(max_len=32))
+        assert eng2.explain_kernels() is rep
