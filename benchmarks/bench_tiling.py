@@ -1,0 +1,219 @@
+"""Microbenchmark for the grid-tiled Pallas lowering + scan recurrences
+(PR-3 tentpole).
+
+Three workloads:
+
+  * **over-budget elementwise chain** — a fused stage chain whose iteration
+    space exceeds the vectorizer's materialization budget, so the generic
+    path demotes the outer axis to a sequential ``fori_loop``.  Measured
+    against full-budget whole-array vectorization and the tiled Pallas
+    kernel across several tile presets (the reported tiled-vs-vectorize
+    curve; interpret-mode Pallas pays a per-grid-step interpreter tax on
+    CPU — the curve is the shape data for the TPU deploy story).
+  * **2-D stencil sweep** — a parallel 5-point smoothing step: whole-array
+    vectorize (slice-based offset reads) vs. tiled Pallas with halo operands.
+  * **CLOUDSC vertical recurrence** — the mini scheme's JK-carried chains
+    under the scan lowering (leading-axis operands sliced per step, written
+    rows stacked) vs. the whole-array-carry ``fori_loop`` baseline.  This is
+    the gated measurement: the CLI exits non-zero when the scan speedup
+    drops below 1.5x.
+
+Correctness gates: each workload's lowerings are checked against the
+``execute_numpy`` float64 oracle at a reduced size before timing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+import jax
+
+from repro.core import (
+    Array,
+    Computation,
+    Loop,
+    Program,
+    Schedule,
+    acc,
+    aff,
+    compile_jax,
+    execute_numpy,
+)
+from repro.core.scheduler import random_inputs
+from repro.core.util import time_fn
+from repro.cloudsc import mini_cloudsc_program
+from repro.cloudsc.scheme import scheme_inputs
+
+from .common import emit
+
+# Interpret-mode Pallas pays ~10ms of interpreter tax per grid step on CPU,
+# so the measured presets keep grids small (the TPU-shaped (8,128)-multiple
+# presets in repro.core.recipes are exercised by the oracle gates and tests).
+TILES = ((128, 512), (256, 512), (128, 1024), (256, 1024))
+
+
+def chain_program(rows: int, cols: int, stages: int = 4,
+                  name: str = "tiling_chain") -> Program:
+    """One fused nest of dependent elementwise stages over (rows, cols)."""
+    arrays = [Array("X", (rows, cols))] + [
+        Array(f"T{s}", (rows, cols)) for s in range(stages)]
+    comps = []
+    prev = "X"
+    for s in range(stages):
+        nm = f"T{s}"
+        comps.append(Computation(
+            f"stage{s}", acc(nm, "i", "j"), (acc(prev, "i", "j"),),
+            lambda v, s=s: v * (1.0 + 0.125 * s) + 0.25))
+        prev = nm
+    nest = Loop("i", rows, body=(Loop("j", cols, body=tuple(comps)),))
+    return Program(name, tuple(arrays), (nest,))
+
+
+def stencil_program(n: int, name: str = "tiling_stencil") -> Program:
+    st = Computation(
+        "st", acc("B", "i", "j"),
+        (acc("A", "i", "j"),
+         acc("A", aff("i", const=-1), "j"), acc("A", aff("i", const=1), "j"),
+         acc("A", "i", aff("j", const=-1)), acc("A", "i", aff("j", const=1))),
+        lambda c, nn, ss, ww, ee: 0.2 * (c + nn + ss + ww + ee))
+    return Program(name, (Array("A", (n, n)), Array("B", (n, n))),
+                   (Loop("i", n - 1, start=1,
+                         body=(Loop("j", n - 1, start=1, body=(st,)),)),))
+
+
+def _jit(prog, sched, out_names):
+    body = compile_jax(prog, sched)
+    return jax.jit(lambda a: {k: body(a)[k] for k in out_names})
+
+
+def _oracle_gate(prog, scheds, out_names, rtol=1e-4):
+    inp = random_inputs(prog, seed=7, dtype=np.float64)
+    ref = execute_numpy(prog, inp)
+    args = {k: np.asarray(v, np.float32) for k, v in inp.items()}
+    for label, sched in scheds:
+        got = _jit(prog, sched, out_names)(args)
+        for k in out_names:
+            denom = max(1e-9, np.abs(ref[k]).max())
+            rel = np.abs(np.asarray(got[k], np.float64) - ref[k]).max() / denom
+            assert rel < rtol, (prog.name, label, k, rel)
+
+
+def bench_chain(repeats: int, rows: int, cols: int) -> dict:
+    final = ("T3",)
+    small = chain_program(32, 64)
+    budget = rows * cols // 4  # force outer-axis demotion in the budget path
+    variants = [
+        ("chain_vectorize_budget",
+         Schedule(mode="canonical", use_idioms=False, vec_budget=budget)),
+        ("chain_vectorize_full",
+         Schedule(mode="canonical", use_idioms=False, vec_budget=1 << 30)),
+    ] + [
+        (f"chain_pallas_{t[0]}x{t[1]}",
+         Schedule(mode="canonical", use_idioms=False, pallas_nest=True,
+                  nest_tile=t))
+        for t in TILES
+    ]
+    _oracle_gate(small, variants, final)
+
+    prog = chain_program(rows, cols)
+    args = {k: v for k, v in random_inputs(prog, dtype=np.float32).items()}
+    out = {}
+    for label, sched in variants:
+        us = time_fn(lambda f=_jit(prog, sched, final): f(args), repeats=repeats)
+        emit(label, us)
+        out[label] = us
+    return out
+
+
+def bench_stencil(repeats: int, n: int) -> dict:
+    small = stencil_program(18)
+    variants = [
+        ("stencil_vectorize",
+         Schedule(mode="canonical", use_idioms=False)),
+    ] + [
+        (f"stencil_pallas_{t[0]}x{t[1]}",
+         Schedule(mode="canonical", use_idioms=False, pallas_nest=True,
+                  nest_tile=t))
+        for t in TILES
+    ]
+    _oracle_gate(small, variants, ("B",), rtol=1e-5)
+
+    prog = stencil_program(n)
+    args = {k: v for k, v in random_inputs(prog, dtype=np.float32).items()}
+    out = {}
+    for label, sched in variants:
+        us = time_fn(lambda f=_jit(prog, sched, ("B",)): f(args), repeats=repeats)
+        emit(label, us)
+        out[label] = us
+    return out
+
+
+def bench_scan(repeats: int, nproma: int, klev: int) -> dict:
+    checks = ("PFPLSL", "TENDQ", "ZTP1")
+    scan_s = Schedule(mode="canonical", use_idioms=False, scan=True)
+    fori_s = Schedule(mode="canonical", use_idioms=False, scan=False)
+
+    small = mini_cloudsc_program(8, 6)
+    sinp = scheme_inputs(8, 6)
+    ref = execute_numpy(small, sinp)
+    sargs = {k: np.asarray(v, np.float32) for k, v in sinp.items()}
+    for label, sched in (("scan", scan_s), ("fori", fori_s)):
+        got = _jit(small, sched, checks)(sargs)
+        for k in checks:
+            denom = max(1e-9, np.abs(ref[k]).max())
+            rel = np.abs(np.asarray(got[k], np.float64) - ref[k]).max() / denom
+            assert rel < 1e-4, (label, k, rel)
+
+    prog = mini_cloudsc_program(nproma, klev)
+    args = {k: np.asarray(v, np.float32)
+            for k, v in scheme_inputs(nproma, klev).items()}
+    fori_us = time_fn(lambda f=_jit(prog, fori_s, checks): f(args),
+                      repeats=repeats)
+    scan_us = time_fn(lambda f=_jit(prog, scan_s, checks): f(args),
+                      repeats=repeats)
+    speedup = fori_us / max(scan_us, 1e-9)
+    emit("cloudsc_recurrence_fori", fori_us, "carried-array baseline")
+    emit("cloudsc_recurrence_scan", scan_us, f"speedup={speedup:.2f}x")
+    return {"fori_us": fori_us, "scan_us": scan_us, "speedup": speedup,
+            "speedup_ok": bool(speedup >= 1.5)}
+
+
+def run(repeats: int = 5, json_path: str | None = None,
+        rows: int = 1024, cols: int = 1024, stencil_n: int = 1024,
+        nproma: int = 4096, klev: int = 137) -> dict:
+    results = {
+        "chain": bench_chain(repeats, rows, cols),
+        "stencil": bench_stencil(repeats, stencil_n),
+        "recurrence": bench_scan(repeats, nproma, klev),
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=1)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--rows", type=int, default=1024)
+    ap.add_argument("--cols", type=int, default=1024)
+    ap.add_argument("--stencil-n", type=int, default=1024)
+    ap.add_argument("--nproma", type=int, default=4096)
+    ap.add_argument("--klev", type=int, default=137)
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    results = run(repeats=args.repeats, json_path=args.json, rows=args.rows,
+                  cols=args.cols, stencil_n=args.stencil_n,
+                  nproma=args.nproma, klev=args.klev)
+    rec = results["recurrence"]
+    if not rec["speedup_ok"]:
+        raise SystemExit(
+            f"scan recurrence speedup {rec['speedup']:.2f}x < 1.5x over the "
+            "carried-array fori baseline")
+
+
+if __name__ == "__main__":
+    main()

@@ -36,6 +36,7 @@ from .normalize import (  # noqa: F401
 )
 from .fusion import FusionPass, fuse_program, optimization_pipeline  # noqa: F401
 from .codegen import Schedule, compile_jax, execute_numpy, run_jax  # noqa: F401
+from .tiling import TilePlan, TilingError, plan_nest_tiling  # noqa: F401
 from .cache import CacheStats, CompilationCache, fingerprint_obj  # noqa: F401
 from .database import TuningDatabase  # noqa: F401
 from .recipes import Recipe  # noqa: F401

@@ -13,6 +13,16 @@ Three lowerings:
   become vector reductions, and BLAS-class computations are dispatched to
   ``jnp.einsum`` / Pallas (idiom detection), mirroring the paper's recipe DB.
 
+On top of the canonical path, two recipe-selected lowerings:
+
+* ``Schedule.pallas_nest`` / ``Schedule.pallas_reduce`` route whole canonical
+  nests through the grid-tiled Pallas kernel (``repro.core.tiling`` plans the
+  grid, ``repro.kernels.nest_kernel`` emits the ``pallas_call``); nests
+  outside the tiled class fall back to the generic path silently.
+* ``Schedule.scan`` lowers carried (recurrence) loops to ``lax.scan`` with
+  leading-axis operands sliced per step instead of whole arrays carried
+  through a ``fori_loop`` and re-gathered every iteration.
+
 Legality is decided with the same dependence machinery the normalizer uses:
 an iterator may be materialized as an array axis iff no dependence of the
 nest is carried by it (reduction self-deps of flagged accumulations exempt).
@@ -21,7 +31,9 @@ from __future__ import annotations
 
 import itertools
 import math
+import weakref
 from dataclasses import dataclass, field
+from dataclasses import replace as dc_replace
 from typing import Any, Callable, Mapping, Sequence
 
 import numpy as np
@@ -44,7 +56,11 @@ from .ir import (
     walk,
 )
 
+# Shared accumulate-op semantics: neutral elements and reducers.  The Pallas
+# nest kernel (repro.kernels.nest_kernel) imports these (plus ``_combine``)
+# so both lowerings stay in sync when an accumulate op is added.
 _ACC_INIT = {"+": 0.0, "*": 1.0, "max": -np.inf, "min": np.inf}
+_ACC_REDUCE = {"+": jnp.sum, "*": jnp.prod, "max": jnp.max, "min": jnp.min}
 
 
 # ---------------------------------------------------------------------------
@@ -103,14 +119,37 @@ def execute_numpy(program: Program, inputs: Mapping[str, np.ndarray]) -> dict[st
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)
 class Schedule:
-    """Scheduling decisions for ``compile_jax`` (one per program)."""
+    """Scheduling decisions for ``compile_jax`` (one per top-level nest).
+
+    The Pallas knobs select the grid-tiled lowering of canonical nests
+    (``repro.core.tiling`` + ``repro.kernels.nest_kernel``): ``pallas_nest``
+    routes fully-parallel nests (elementwise/stencil groups), ``pallas_reduce``
+    routes associative reductions through a grid-accumulated scratch block.
+    Nests outside the tiled class silently fall back to the generic
+    vectorized path, so both flags are safe to set unconditionally.
+
+    ``scan`` replaces the whole-array-carry ``lax.fori_loop`` lowering of
+    carried (recurrence) loops with a ``lax.scan`` that slices leading-axis
+    operands into per-step rows and stacks the written rows (canonical mode
+    only; 'as_written' keeps the baseline-compiler fori behavior).
+    """
 
     mode: str = "canonical"  # 'as_written' | 'canonical'
     use_idioms: bool = True  # BLAS-class dispatch (einsum / Pallas)
     vec_budget: int = 1 << 22  # max materialized elements per computation
-    pallas_gemm: bool = False  # route GEMM idiom to the Pallas kernel
+    pallas_gemm: bool = False  # route GEMM idiom to the Pallas MXU kernel
     tile: tuple[int, int, int] | None = None  # Pallas GEMM block sizes
     interpret: bool = True  # Pallas interpret mode (CPU container)
+    pallas_nest: bool = False  # grid-tiled Pallas for parallel nests
+    pallas_reduce: bool = False  # grid-tiled Pallas for reduction nests
+    nest_tile: tuple[int, ...] | None = None  # trailing-axis tiles (+red last)
+    unroll: int = 1  # in-kernel reduction unroll factor
+    scan: bool = True  # lax.scan recurrences (canonical mode)
+    vmem_budget: int = 1 << 23  # tiling planner working-set budget (bytes)
+
+
+# Trace-time lowering counters (tests assert which path actually fired).
+LOWERING_STATS = {"scan": 0, "fori": 0}
 
 
 @dataclass
@@ -140,7 +179,26 @@ def _written_arrays(node: Node) -> list[str]:
 
 
 def _is_multiplicative(expr: Callable, n_reads: int) -> float | None:
-    """Probe: does ``expr(*xs) == c * prod(xs)``? Return c, else None."""
+    """Probe: does ``expr(*xs) == c * prod(xs)``? Return c, else None.
+
+    Memoized per ``expr`` object (weakly, so cached programs don't leak):
+    the 4-numpy-probe answer is a pure function of the callable, and idiom
+    detection re-asks it for every computation on every trace."""
+    try:
+        per_expr = _MULT_MEMO.setdefault(expr, {})
+    except TypeError:  # not weakref-able (e.g. some builtins/partials)
+        return _is_multiplicative_probe(expr, n_reads)
+    if n_reads not in per_expr:
+        per_expr[n_reads] = _is_multiplicative_probe(expr, n_reads)
+    return per_expr[n_reads]
+
+
+_MULT_MEMO: "weakref.WeakKeyDictionary[Callable, dict[int, float | None]]" = (
+    weakref.WeakKeyDictionary()
+)
+
+
+def _is_multiplicative_probe(expr: Callable, n_reads: int) -> float | None:
     if n_reads == 0:
         return None
     rng = np.random.default_rng(0)
@@ -170,6 +228,18 @@ def _single_iter_dims(a: Access) -> list[str] | None:
         if ix.const != 0 or len(ix.coeffs) != 1 or ix.coeffs[0][1] != 1:
             return None
         out.append(ix.coeffs[0][0])
+    return out
+
+
+def _offset_iter_dims(a: Access) -> list[tuple[str, int]] | None:
+    """Like ``_single_iter_dims`` but tolerating constant offsets: per dim,
+    ``(iterator, const)`` when the subscript is ``iterator + const`` (coeff 1);
+    None when any dim is not of that shape."""
+    out = []
+    for ix in a.index:
+        if len(ix.coeffs) != 1 or ix.coeffs[0][1] != 1:
+            return None
+        out.append((ix.coeffs[0][0], ix.const))
     return out
 
 
@@ -239,6 +309,13 @@ class _NestEmitter:
 
     # -- emission -----------------------------------------------------------
     def emit(self, nest: Node, env: dict[str, jnp.ndarray]) -> dict[str, jnp.ndarray]:
+        if self.s.pallas_nest or self.s.pallas_reduce:
+            try:
+                from ..kernels.nest_kernel import emit_nest
+
+                return emit_nest(self.p, nest, env, self.s)
+            except Unsupported:
+                pass  # outside the tiled class: generic lowering below
         self.vec_plan = self.plan(nest)
         return self._emit(nest, env, {}, [])
 
@@ -256,10 +333,19 @@ class _NestEmitter:
             for child in node.body:
                 env = self._emit(child, env, seq_env, vec2)
             return env
-        # sequential loop -> lax.fori_loop carrying the written arrays
-        carried = _written_arrays(node)
         if node.trip_count <= 0:
             return env
+        # sequential loop: prefer the lax.scan lowering (leading-axis operands
+        # become per-step slices; written rows are stacked instead of
+        # scattered into a whole-array carry each iteration)
+        if self.s.mode == "canonical" and self.s.scan:
+            out = self._try_scan_loop(node, env, seq_env, vec_axes)
+            if out is not None:
+                LOWERING_STATS["scan"] += 1
+                return out
+        # fallback: lax.fori_loop carrying the written arrays whole
+        carried = _written_arrays(node)
+        LOWERING_STATS["fori"] += 1
 
         def body(k, carry):
             e = dict(env)
@@ -273,6 +359,125 @@ class _NestEmitter:
         out = lax.fori_loop(0, node.trip_count, body, tuple(env[a] for a in carried))
         env = dict(env)
         env.update(dict(zip(carried, out)))
+        return env
+
+    # -- scan lowering of carried loops --------------------------------------
+    def _scan_sliceable(self, node: Loop) -> tuple[dict[str, int], set[str]] | None:
+        """Classify the arrays of a sequential loop's subtree.
+
+        Returns ``(written_lookback, readonly)`` where ``written_lookback``
+        maps each *written* array whose every access subscripts the leading
+        axis with exactly ``t + const`` (write const 0, read consts <= 0) to
+        its maximum lookback depth, and ``readonly`` holds read-only arrays
+        accessed only at ``t`` itself.  None when no written array qualifies
+        (scanning would buy nothing over fori)."""
+        t = node.iterator
+        status: dict[str, dict] = {}
+        for _, c in walk(node):
+            for a, is_w in [(c.write, True)] + [(r, False) for r in c.reads]:
+                rec = status.setdefault(a.array, {"w": [], "r": [], "bad": False})
+                ix0 = a.index[0] if a.index else None
+                uses_t = any(ix.coeff(t) != 0 for ix in a.index)
+                if ix0 is not None and ix0.coeffs == ((t, 1),) and not any(
+                    ix.coeff(t) != 0 for ix in a.index[1:]
+                ):
+                    (rec["w"] if is_w else rec["r"]).append(ix0.const)
+                elif uses_t:
+                    rec["bad"] = True
+                else:
+                    rec.setdefault("plain", True)  # t-independent access
+        written_lb: dict[str, int] = {}
+        readonly: set[str] = set()
+        for name, rec in status.items():
+            if rec["bad"] or rec.get("plain"):
+                continue
+            if rec["w"]:
+                if all(c == 0 for c in rec["w"]) and all(c <= 0 for c in rec["r"]):
+                    written_lb[name] = max([0] + [-c for c in rec["r"]])
+            elif rec["r"] and all(c == 0 for c in rec["r"]):
+                readonly.add(name)
+        if not written_lb:
+            return None
+        return written_lb, readonly
+
+    def _try_scan_loop(self, node: Loop, env, seq_env, vec_axes):
+        if node.step != 1:
+            return None
+        cls = self._scan_sliceable(node)
+        if cls is None:
+            return None
+        written_lb, readonly = cls
+        t, start, n = node.iterator, node.start, node.trip_count
+        for name in list(written_lb) + sorted(readonly):
+            arr = env[name]
+            if arr.ndim == 0 or node.start + n > arr.shape[0]:
+                return None  # leading axis does not cover the loop range
+        sliceable = set(written_lb) | readonly
+
+        def lag_name(a: str, d: int) -> str:
+            return f"{a}@lag{d}"
+
+        def rw_access(a: Access) -> Access:
+            if a.array not in sliceable:
+                return a
+            c = a.index[0].const
+            nm = a.array if c == 0 else lag_name(a.array, -c)
+            return Access(nm, a.index[1:])
+
+        def rw(nd: Node) -> Node:
+            if isinstance(nd, Computation):
+                return dc_replace(
+                    nd,
+                    write=rw_access(nd.write),
+                    reads=tuple(rw_access(r) for r in nd.reads),
+                )
+            return dc_replace(nd, body=tuple(rw(b) for b in nd.body))
+
+        children = tuple(rw(ch) for ch in node.body)
+        whole_written = [a for a in _written_arrays(node) if a not in written_lb]
+
+        xs = {}
+        for a in sliceable:
+            arr = env[a]
+            xs[a] = arr if (start == 0 and n == arr.shape[0]) else lax.slice(
+                arr, [start] + [0] * (arr.ndim - 1),
+                [start + n] + list(arr.shape[1:]))
+        vks = start + jnp.arange(n, dtype=jnp.int32)
+        lags0 = {
+            lag_name(a, d): env[a][(start - d) % env[a].shape[0]]
+            for a, lb in written_lb.items() for d in range(1, lb + 1)
+        }
+        whole0 = {a: env[a] for a in whole_written}
+
+        def body(carry, x):
+            lags, whole = carry
+            vk, slabs = x
+            e = dict(env)
+            e.update(whole)
+            e.update(slabs)
+            e.update(lags)
+            s2 = dict(seq_env)
+            s2[t] = vk
+            for ch in children:
+                e = self._emit(ch, e, s2, vec_axes)
+            new_lags = {}
+            for a, lb in written_lb.items():
+                if lb >= 1:
+                    new_lags[lag_name(a, 1)] = e[a]
+                for d in range(2, lb + 1):
+                    new_lags[lag_name(a, d)] = lags[lag_name(a, d - 1)]
+            return (new_lags, {a: e[a] for a in whole}), {
+                a: e[a] for a in written_lb}
+
+        (_, whole_f), ys = lax.scan(body, (lags0, whole0), (vks, xs))
+        env = dict(env)
+        for a in written_lb:
+            arr = env[a]
+            rows = ys[a].astype(arr.dtype)
+            env[a] = rows if (start == 0 and n == arr.shape[0]) else (
+                lax.dynamic_update_slice(
+                    arr, rows, [start] + [0] * (arr.ndim - 1)))
+        env.update(whole_f)
         return env
 
     # -- computation emission -----------------------------------------------
@@ -298,21 +503,33 @@ class _NestEmitter:
         return val
 
     def _fast_read(self, a: Access, arr, axes: list[_VecAxis]):
-        """Direct (possibly transposed) array view when every dim of ``a`` is
-        a distinct full-range vectorized axis — avoids materializing iota
-        index grids and a gather per access, which XLA fuses far worse than
-        the plain transpose+reshape this emits (dominant for re-fused
-        elementwise chains)."""
-        its = _single_iter_dims(a)
-        if its is None or len(its) != arr.ndim or len(set(its)) != len(its):
+        """Direct (possibly sliced/transposed) array view when every dim of
+        ``a`` is a distinct vectorized axis up to a constant offset — avoids
+        materializing iota index grids and a gather per access, which XLA
+        fuses far worse than the plain slice+transpose+reshape this emits
+        (dominant for re-fused elementwise chains and constant-offset
+        stencil reads like ``A[i-1, j]``)."""
+        its_c = _offset_iter_dims(a)
+        if its_c is None or len(its_c) != arr.ndim:
+            return None
+        its = [it for it, _ in its_c]
+        if len(set(its)) != len(its):
             return None
         axis_of = {ax.iterator: k for k, ax in enumerate(axes)}
         if not all(it in axis_of for it in its):
             return None
-        for d, it in enumerate(its):
+        lo = []
+        for d, (it, c) in enumerate(its_c):
             ax = axes[axis_of[it]]
-            if not (ax.start == 0 and ax.step == 1 and ax.trip == arr.shape[d]):
+            start = ax.start + c
+            if ax.step != 1 or start < 0 or start + ax.trip > arr.shape[d]:
                 return None
+            lo.append(start)
+        if any(lo) or any(axes[axis_of[it]].trip != arr.shape[d]
+                          for d, it in enumerate(its)):
+            arr = lax.slice(
+                arr, lo, [s + axes[axis_of[it]].trip
+                          for s, it in zip(lo, its)])
         order = sorted(range(arr.ndim), key=lambda d: axis_of[its[d]])
         out = jnp.transpose(arr, order) if order != list(range(arr.ndim)) else arr
         shape = [1] * len(axes)
@@ -364,8 +581,7 @@ class _NestEmitter:
             fill = _ACC_INIT[acc]
             vals = jnp.where(mask, vals, fill)
         if red:
-            redfn = {"+": jnp.sum, "*": jnp.prod, "max": jnp.max, "min": jnp.min}[acc]
-            vals = redfn(vals, axis=tuple(red))
+            vals = _ACC_REDUCE[acc](vals, axis=tuple(red))
         kept_axes = [axes[k] for k in keep]
 
         arr = env[comp.write.array]
@@ -378,20 +594,25 @@ class _NestEmitter:
             env[comp.write.array] = new.astype(arr.dtype)
             return env
 
-        # fast path: write map is a permutation of kept axes covering the array
+        # fast path: write map is a permutation of kept axes addressing a
+        # contiguous region of the array (identity scatter / interior slice)
         # (for accumulates, any mask was already folded into neutral fills)
         fast = self._fast_write(comp, kept_axes, arr)
         if fast is not None:
-            perm = fast
+            perm, los, full = fast
             vt = jnp.transpose(vals, perm) if perm != tuple(range(vals.ndim)) else vals
+            old = arr if full else lax.slice(
+                arr, los, [lo + kept_axes[p].trip for lo, p in zip(los, perm)])
             if acc is None:
                 if mask is not None:
                     mt = jnp.transpose(mask, perm) if perm != tuple(range(mask.ndim)) else mask
                     # mask covers only kept axes here (no reduction with set)
-                    vt = jnp.where(mt, vt, arr)
-                env[comp.write.array] = vt.astype(arr.dtype)
+                    vt = jnp.where(mt, vt, old)
+                new = vt.astype(arr.dtype)
             else:
-                env[comp.write.array] = _combine(acc, arr, vt).astype(arr.dtype)
+                new = _combine(acc, old, vt).astype(arr.dtype)
+            env[comp.write.array] = (
+                new if full else lax.dynamic_update_slice(arr, new, los))
             return env
 
         widx = tuple(
@@ -413,19 +634,27 @@ class _NestEmitter:
         return env
 
     def _fast_write(self, comp, kept_axes, arr):
-        """Return transpose perm if the write map is a full-cover permutation
-        of the kept vectorized axes (identity scatter)."""
-        its = _single_iter_dims(comp.write)
-        if its is None or len(its) != arr.ndim:
+        """Return ``(perm, origins, full_cover)`` when the write map is a
+        permutation of the kept vectorized axes addressing a contiguous
+        in-bounds region (constant offsets and non-zero loop starts allowed:
+        stencil interiors update via slice instead of an index-grid scatter).
+        """
+        its_c = _offset_iter_dims(comp.write)
+        if its_c is None or len(its_c) != arr.ndim:
             return None
+        its = [it for it, _ in its_c]
         axis_of = {a.iterator: k for k, a in enumerate(kept_axes)}
         if set(its) != set(axis_of) or len(set(its)) != len(its):
             return None
-        for d, it in enumerate(its):
+        los, full = [], True
+        for d, (it, c) in enumerate(its_c):
             a = kept_axes[axis_of[it]]
-            if not (a.start == 0 and a.step == 1 and a.stop == arr.shape[d] == a.trip):
+            lo = a.start + c
+            if a.step != 1 or lo < 0 or lo + a.trip > arr.shape[d]:
                 return None
-        return tuple(axis_of[it] for it in its)
+            los.append(lo)
+            full = full and lo == 0 and a.trip == arr.shape[d]
+        return tuple(axis_of[it] for it in its), tuple(los), full
 
     # -- BLAS idiom: einsum / Pallas GEMM ------------------------------------
     def _try_einsum(self, comp, env, seq_env, axes):

@@ -17,15 +17,27 @@ class Recipe:
     """Lowering decisions for one canonical nest.
 
     kind:
-      'einsum'       — BLAS-class idiom: dispatch to jnp.einsum (library call)
-      'pallas_gemm'  — same idiom, routed to the Pallas MXU kernel (TPU path)
-      'vectorize'    — generic vectorized lowering of all legal iterators
-      'sequential'   — keep sequential loops (recurrences; the safe fallback)
+      'einsum'        — BLAS-class idiom: dispatch to jnp.einsum (library call)
+      'pallas_gemm'   — same idiom, routed to the Pallas MXU kernel (TPU path)
+      'pallas_nest'   — grid-tiled Pallas kernel for fully-parallel nests
+                        (elementwise/stencil groups; tiling planner partitions
+                        the parallel iterators into a VPU-aligned grid)
+      'pallas_reduce' — grid-tiled Pallas kernel for associative reductions
+                        (innermost reduction iterator becomes an 'arbitrary'
+                        grid dim accumulated through VMEM scratch; ``unroll``
+                        splits the in-tile reduction into sequential chunks)
+      'vectorize'     — generic vectorized lowering of all legal iterators
+      'sequential'    — keep sequential loops (recurrences; the safe fallback)
+
+    ``tile`` is the Pallas block-size tuple: ``(bm, bn, bk)`` for
+    'pallas_gemm'; for 'pallas_nest'/'pallas_reduce' it is assigned to the
+    *innermost* parallel axes (with the reduction tile last for
+    'pallas_reduce') and the planner clamps it to the nest's extents.
     """
 
     kind: str = "vectorize"
     vec_budget: int = 1 << 22          # materialization budget (elements)
-    tile: tuple[int, int, int] | None = None   # Pallas (bm, bn, bk)
+    tile: tuple[int, ...] | None = None  # Pallas block sizes (see docstring)
     parallelize: str | None = None     # mesh axis for the outer parallel loop
     unroll: int = 1                    # reduction unroll factor
     notes: str = ""
@@ -56,4 +68,34 @@ GEMM_TILE_PRESETS: tuple[tuple[int, int, int], ...] = (
     (128, 128, 256),
     (512, 256, 128),
     (256, 256, 256),
+)
+
+# VPU-aligned tile presets for the grid-tiled nest kernel: (sublane, lane)
+# pairs — multiples of (8, 128) for fp32 — plus lane-only presets for rank-1
+# nests.  Assigned to the innermost parallel axes; the planner clamps each
+# entry to the axis extent, so one preset set serves every canonical shape.
+NEST_TILE_PRESETS: tuple[tuple[int, ...], ...] = (
+    (8, 128),
+    (16, 128),
+    (32, 128),
+    (8, 256),
+    (16, 256),
+    (64, 128),
+    (8, 512),
+    (128,),
+    (512,),
+    (1024,),
+)
+
+# For 'pallas_reduce' the last element is the reduction-axis tile (the
+# 'arbitrary' grid dimension accumulated through VMEM scratch).
+REDUCE_TILE_PRESETS: tuple[tuple[int, ...], ...] = (
+    (8, 128, 128),
+    (16, 128, 128),
+    (8, 256, 128),
+    (8, 128, 256),
+    (32, 128, 128),
+    (8, 128, 512),
+    (128, 128),
+    (256, 128),
 )

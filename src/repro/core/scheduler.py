@@ -101,7 +101,25 @@ class Daisy:
         interpret: bool = True,
         cache: CompilationCache | None = None,
         fuse: bool = True,
+        backend: str | None = None,
     ):
+        """``backend`` selects how Pallas-kind recipes are executed:
+
+        * ``'xla'``             — rewrite pallas recipes onto their XLA
+                                  equivalents (einsum / vectorize); no Pallas
+                                  kernels are built at all,
+        * ``'pallas_interpret'``— Pallas kernels in interpret mode (CPU
+                                  correctness container; the default),
+        * ``'pallas'``          — compiled Pallas (the TPU deploy target).
+
+        ``interpret`` is kept for backward compatibility; passing ``backend``
+        overrides it.
+        """
+        if backend is not None:
+            if backend not in ("xla", "pallas_interpret", "pallas"):
+                raise ValueError(f"unknown backend {backend!r}")
+            interpret = backend != "pallas"
+        self.backend = backend or ("pallas_interpret" if interpret else "pallas")
         self.db = db if db is not None else TuningDatabase()
         self.interpret = interpret
         self.fuse = fuse
@@ -140,8 +158,17 @@ class Daisy:
         # alive), so Daisy objects sharing one CompilationCache but holding
         # different databases never exchange plans; generation expires plans
         # resolved against older contents of the *same* database.
-        return (fp, normalize_first, self.fuse, self.interpret,
+        return (fp, normalize_first, self.fuse, self.interpret, self.backend,
                 id(self.db), self.db.generation)
+
+    def _backend_recipe(self, recipe: Recipe) -> Recipe:
+        """Map a recipe onto the selected backend: under 'xla' the Pallas
+        kinds degrade to their XLA equivalents (same schedule semantics,
+        library/vector lowering instead of kernels)."""
+        if self.backend == "xla" and recipe.kind.startswith("pallas"):
+            kind = "einsum" if recipe.kind == "pallas_gemm" else "vectorize"
+            return replace(recipe, kind=kind, tile=None)
+        return recipe
 
     # -- planning -------------------------------------------------------------
     def plan(
@@ -177,7 +204,10 @@ class Daisy:
         if cached is not None:
             return cached
         plan = self.plan(program, normalize_first=normalize_first, _fp=fp)
-        per_nest = [schedule_from_recipe(np_.recipe, self.interpret) for np_ in plan.nests]
+        per_nest = [
+            schedule_from_recipe(self._backend_recipe(np_.recipe), self.interpret)
+            for np_ in plan.nests
+        ]
         fn = compile_jax(plan.program, per_nest)
         result = ((jax.jit(fn) if jit else fn), plan)
         self.cache.put(key, result)
@@ -207,7 +237,7 @@ class Daisy:
                 inputs = random_inputs(nprog)
                 if idiom.kind in ("blas3",):
                     # BLAS-3: straight to the library-call recipe (paper §4)
-                    t = measure_recipe(nprog, inputs, seed_recipe)
+                    t = measure_recipe(nprog, inputs, self._backend_recipe(seed_recipe))
                     self.db.add(fp, emb, seed_recipe, provenance=f"{prog.name}:idiom", measured_us=t)
                     continue
                 pending.append((fp, emb, nprog, inputs, seed_recipe))
@@ -216,10 +246,14 @@ class Daisy:
         results: list[tuple[str, np.ndarray, Recipe, float]] = []
         for fp, emb, nprog, inputs, seed_recipe in pending:
             if search:
+                # candidates are timed as the backend will actually lower
+                # them (under 'xla' no Pallas kernel is built or measured)
                 best, t = evolve_recipe(nprog, inputs, seed_recipe,
-                                        iterations=search_iterations)
+                                        iterations=search_iterations,
+                                        resolve=self._backend_recipe)
             else:
-                best, t = seed_recipe, measure_recipe(nprog, inputs, seed_recipe)
+                best, t = seed_recipe, measure_recipe(
+                    nprog, inputs, self._backend_recipe(seed_recipe))
             results.append((fp, emb, best, t))
             if verbose:
                 print(f"  seeded {fp[:60]} -> {best.kind} ({t:.0f}us)")
@@ -233,5 +267,6 @@ class Daisy:
                 pool = [e.recipe for _, e in near]
                 cur = self.db.lookup_exact(fp)
                 best, t = evolve_recipe(nprog, inputs, cur,
-                                        iterations=1, reseed_pool=pool)
+                                        iterations=1, reseed_pool=pool,
+                                        resolve=self._backend_recipe)
                 self.db.add(fp, emb, best, provenance="search+transfer", measured_us=t)

@@ -18,7 +18,12 @@ import numpy as np
 from .codegen import Schedule, compile_jax
 from .idioms import IdiomMatch
 from .ir import Node, Program
-from .recipes import GEMM_TILE_PRESETS, Recipe
+from .recipes import (
+    GEMM_TILE_PRESETS,
+    NEST_TILE_PRESETS,
+    REDUCE_TILE_PRESETS,
+    Recipe,
+)
 from .util import time_fn
 
 
@@ -39,6 +44,14 @@ def schedule_from_recipe(recipe: Recipe, interpret: bool = True) -> Schedule:
     if recipe.kind == "pallas_gemm":
         return Schedule(mode="canonical", use_idioms=True, vec_budget=recipe.vec_budget,
                         pallas_gemm=True, tile=recipe.tile, interpret=interpret)
+    if recipe.kind == "pallas_nest":
+        return Schedule(mode="canonical", use_idioms=False, vec_budget=recipe.vec_budget,
+                        pallas_nest=True, nest_tile=recipe.tile,
+                        unroll=recipe.unroll, interpret=interpret)
+    if recipe.kind == "pallas_reduce":
+        return Schedule(mode="canonical", use_idioms=False, vec_budget=recipe.vec_budget,
+                        pallas_reduce=True, nest_tile=recipe.tile,
+                        unroll=recipe.unroll, interpret=interpret)
     if recipe.kind == "sequential":
         return Schedule(mode="as_written", use_idioms=False, vec_budget=recipe.vec_budget,
                         interpret=interpret)
@@ -49,12 +62,33 @@ def schedule_from_recipe(recipe: Recipe, interpret: bool = True) -> Schedule:
 def _mutate(recipe: Recipe, rng: random.Random) -> Recipe:
     r = recipe
     roll = rng.random()
-    if roll < 0.3:
+    if roll < 0.25:
         r = replace(r, vec_budget=max(1 << 16, min(1 << 24, int(r.vec_budget * rng.choice([0.25, 0.5, 2, 4])))))
-    elif roll < 0.6 and r.kind in ("einsum", "vectorize"):
+    elif roll < 0.45 and r.kind in ("einsum", "vectorize"):
         r = replace(r, kind="vectorize" if r.kind == "einsum" else "einsum")
-    elif roll < 0.8 and r.kind == "pallas_gemm":
-        r = replace(r, tile=rng.choice(GEMM_TILE_PRESETS))
+    elif roll < 0.6:
+        # hop into / out of the grid-tiled Pallas class.  A pallas_* recipe
+        # on a nest outside its class falls back to the generic lowering at
+        # compile time, so mis-kinded mutants still measure (never crash) —
+        # selection simply discards them when the fallback is slower.
+        if r.kind == "vectorize":
+            kind = rng.choice(["pallas_nest", "pallas_reduce"])
+            presets = NEST_TILE_PRESETS if kind == "pallas_nest" else REDUCE_TILE_PRESETS
+            r = replace(r, kind=kind, tile=rng.choice(presets))
+        elif r.kind in ("pallas_nest", "pallas_reduce"):
+            r = replace(r, kind="vectorize", tile=None)
+        elif r.kind == "pallas_gemm":
+            r = replace(r, tile=rng.choice(GEMM_TILE_PRESETS))
+        elif r.kind == "einsum":
+            # library-call reductions can try the tiled in-kernel reduction
+            r = replace(r, kind="pallas_reduce", tile=rng.choice(REDUCE_TILE_PRESETS))
+        else:  # 'sequential': the only remaining hop is back to vectorize
+            r = replace(r, kind="vectorize", tile=None)
+    elif roll < 0.85 and r.kind in ("pallas_nest", "pallas_reduce", "pallas_gemm"):
+        presets = {"pallas_nest": NEST_TILE_PRESETS,
+                   "pallas_reduce": REDUCE_TILE_PRESETS,
+                   "pallas_gemm": GEMM_TILE_PRESETS}[r.kind]
+        r = replace(r, tile=rng.choice(presets))
     else:
         r = replace(r, unroll=rng.choice([1, 2, 4]))
     return r
@@ -84,19 +118,38 @@ def evolve_recipe(
     population: int = 4,
     rng_seed: int = 0,
     reseed_pool: list[Recipe] | None = None,
+    resolve: Callable[[Recipe], Recipe] | None = None,
 ) -> tuple[Recipe, float]:
     """Mutation+selection over recipes, runtime fitness (paper's epochs).
 
     ``reseed_pool`` models the paper's 2nd/3rd epochs: recipes of the most
     similar nests (by embedding distance) join the population.
+
+    ``resolve`` (e.g. ``Daisy._backend_recipe``) maps each candidate onto
+    the lowering the deployment backend will actually run before timing it,
+    so fitness measures what ``compile()`` later executes — under the 'xla'
+    backend Pallas-kind mutants are timed as their vectorize/einsum
+    degradations and no Pallas kernel is ever built.
     """
     rng = random.Random(rng_seed)
     pop = [seed_recipe] + [_mutate(seed_recipe, rng) for _ in range(population - 1)]
     if reseed_pool:
         pop.extend(reseed_pool[: population // 2])
-    best, best_t = seed_recipe, measure_recipe(nest_program, inputs, seed_recipe)
+
+    # Recipes are frozen (hashable) values: memoize each candidate's wall
+    # time so survivors are timed once, not re-timed every iteration they
+    # stay in the population (that re-timing dominated seed wall time).
+    timed: dict[Recipe, float] = {}
+
+    def fitness(r: Recipe) -> float:
+        key = resolve(r) if resolve is not None else r
+        if key not in timed:
+            timed[key] = measure_recipe(nest_program, inputs, key)
+        return timed[key]
+
+    best, best_t = seed_recipe, fitness(seed_recipe)
     for _ in range(iterations):
-        scored = [(measure_recipe(nest_program, inputs, r), r) for r in pop]
+        scored = [(fitness(r), r) for r in pop]
         scored.sort(key=lambda t: t[0])
         if scored[0][0] < best_t:
             best_t, best = scored[0]
