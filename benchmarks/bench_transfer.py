@@ -1,0 +1,166 @@
+"""Transfer benchmark — the paper's headline mechanism, end to end.
+
+Every B/np variant of the PolyBench suite is compiled at bench size under:
+
+  * **default**    — default idiom recipes on the program *as authored*:
+    Daisy with an empty database and ``normalize_first=False``.  This is
+    the deployment without the shipped mechanism — per-nest idiom
+    classification and default recipes, but no normalization and no
+    transfer database.
+  * **normalized** — the pass pipeline + default recipes (empty database).
+    Reported, not gated: it splits the mechanism into its two halves
+    (normalization vs. transferred recipes).
+  * **transfer**   — the full pipeline warm-started from the shipped
+    pretuned database (``data/pretuned_xla.json``, tuned offline by
+    ``repro.tools.tune`` on the **A variants only**): every canonical nest
+    resolves by exact fingerprint or embedding nearest-neighbour.
+
+The B/np variants were never tuned themselves — their speedup is knowledge
+transferred from the A variants through normalization + the database (§4).
+Correctness is cross-checked per variant (transfer vs default outputs).
+
+Gated variants (CI exits non-zero under the threshold) are the strided
+B variants, where the authored composition (k-outer contractions, strided
+MAC orders) collapses the default lowering: ``syrk:b``, ``2mm:b``,
+``3mm:b``, ``syr2k:b``, ``doitgen:b``, ``gemver:b`` — measured margins are
+4-13x, so the 1.3x gate has headroom against 1-core CI noise.  The
+spatial-transposed stencil variants (``jacobi-2d:b``, ``fdtd-2d:b``,
+``heat-3d:b``) sit at parity by construction in this lowering: the
+vectorized whole-array JAX path is insensitive to the authored spatial
+loop order, so normalization's stencil wins only appear against the
+``as_written`` baseline (fig6/fig7 measure that).  They are reported and
+held to the parity floor instead.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import Counter
+
+import numpy as np
+
+from repro.core import Daisy, TuningDatabase
+from repro.core.database import default_pretuned_path
+from repro.polybench import BENCHMARKS, NAMES
+
+from .common import emit, inputs_for, timed
+
+BACKEND = "xla"
+GATES = {"syrk:b": 1.3, "2mm:b": 1.3, "3mm:b": 1.3, "syr2k:b": 1.3,
+         "doitgen:b": 1.3, "gemver:b": 1.3}
+# Catastrophe floor for ungated variants: a transferred recipe must never
+# make a program this much slower than the no-database default.  Loose on
+# purpose — it exists to catch a semantically-wrong or pathological recipe
+# (order-of-magnitude regressions), while ms-scale variants see +-40%
+# run-to-run drift on shared CI cores and fission itself costs ~1.5x on
+# the tightly-fused compositions (gesummv's single-loop form).
+PARITY = 0.4
+
+
+def _check_outputs(key: str, got: dict, ref: dict, out_name: str) -> None:
+    a = np.asarray(got[out_name], np.float64)
+    b = np.asarray(ref[out_name], np.float64)
+    denom = max(1e-9, float(np.abs(b).max()))
+    rel = float(np.abs(a - b).max()) / denom
+    if not rel < 1e-3:
+        raise AssertionError(
+            f"{key}: transfer and default outputs diverge (rel={rel:.2e}) — "
+            "a transferred recipe changed semantics"
+        )
+
+
+def run(repeats: int = 3, size: str = "bench", db_path: str | None = None,
+        json_path: str | None = None, names=NAMES,
+        gates: dict[str, float] = GATES) -> dict:
+    db_path = db_path or default_pretuned_path(BACKEND)
+    pre = TuningDatabase.load(db_path)
+    d_default = Daisy(db=TuningDatabase(), backend=BACKEND)
+    d_transfer = Daisy(db=pre, backend=BACKEND)
+
+    variants: dict[str, dict] = {}
+    for name in names:
+        b = BENCHMARKS[name]
+        measured: dict[int, dict] = {}  # builder id -> row (np often aliases b)
+        for var in ("b", "np"):
+            builder = b.variants[var]
+            key = f"{name}:{var}"
+            cached = measured.get(id(builder))
+            if cached is not None:
+                variants[key] = dict(cached, alias=True)
+                continue
+            prog = b.make(var, size)
+            inp = inputs_for(prog)
+            f_def, _ = d_default.compile(prog, normalize_first=False)
+            f_norm, _ = d_default.compile(prog)
+            f_tr, plan = d_transfer.compile(prog)
+            t_def = timed(f_def, inp, repeats)
+            t_norm = timed(f_norm, inp, repeats)
+            t_tr = timed(f_tr, inp, repeats)
+            _check_outputs(key, f_tr(inp), f_def(inp), b.output)
+            sources = Counter(p.source.split("(")[0] for p in plan.nests)
+            speedup = t_def / max(t_tr, 1e-9)
+            row = {"default_us": t_def, "normalized_us": t_norm,
+                   "transfer_us": t_tr, "speedup": round(speedup, 3),
+                   "sources": dict(sources)}
+            measured[id(builder)] = row
+            variants[key] = row
+            emit(f"transfer/{key}/default", t_def)
+            emit(f"transfer/{key}/normalized", t_norm)
+            emit(f"transfer/{key}/transfer", t_tr,
+                 f"speedup={speedup:.2f}x hits={dict(sources)}")
+
+    gate_rows = {}
+    failures = []
+    for key, need in gates.items():
+        if key not in variants:
+            continue
+        row = variants[key]
+        hit = row["sources"].get("exact", 0) + row["sources"].get("transfer", 0)
+        ok = row["speedup"] >= need and hit > 0
+        gate_rows[key] = {"required": need, "speedup": row["speedup"],
+                          "db_hits": hit, "ok": ok}
+        if not ok:
+            failures.append(f"{key}: {row['speedup']:.2f}x < {need}x "
+                            f"(db hits: {hit})")
+    for key, row in variants.items():
+        if key not in gates and not row.get("alias") and row["speedup"] < PARITY:
+            failures.append(f"{key}: transfer regressed to {row['speedup']:.2f}x "
+                            f"of default (parity floor {PARITY}x)")
+
+    results = {"db": str(db_path), "db_meta": pre.meta, "size": size,
+               "backend": BACKEND, "repeats": repeats,
+               "variants": variants, "gates": gate_rows, "failures": failures}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=1)
+    for key, g in gate_rows.items():
+        emit(f"transfer/GATE/{key}", 0.0,
+             f"speedup={g['speedup']:.2f}x required={g['required']}x ok={g['ok']}")
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--size", default="bench", choices=["mini", "bench"])
+    ap.add_argument("--db", default=None,
+                    help="pretuned database (default: shipped data/pretuned_xla.json)")
+    ap.add_argument("--names", default=None, help="comma-separated benchmark subset")
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    ap.add_argument("--no-gate", action="store_true",
+                    help="report only; do not fail on thresholds")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    names = tuple(args.names.split(",")) if args.names else NAMES
+    unknown = [n for n in names if n not in BENCHMARKS]
+    if unknown:
+        ap.error(f"unknown benchmark(s): {', '.join(unknown)} "
+                 f"(valid: {', '.join(BENCHMARKS)})")
+    results = run(repeats=args.repeats, size=args.size, db_path=args.db,
+                  json_path=args.json, names=names)
+    if results["failures"] and not args.no_gate:
+        raise SystemExit("transfer gate failed:\n  " + "\n  ".join(results["failures"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,10 @@ framework; the format is versioned (v2 adds the ``version`` field) and
 """
 from __future__ import annotations
 
+import itertools
 import json
+import math
+import os
 from dataclasses import dataclass, field
 from pathlib import Path
 
@@ -28,6 +31,43 @@ from .embedding import distance
 from .recipes import Recipe
 
 SCHEMA_VERSION = 2
+
+# Directory holding the shipped pretuned databases (``repro.tools.tune``
+# output).  Overridable for deployments that stage their own tuning data.
+PRETUNED_DIR_ENV = "REPRO_PRETUNED_DIR"
+
+
+def pretuned_dir() -> Path:
+    d = os.environ.get(PRETUNED_DIR_ENV)
+    return Path(d) if d else Path(__file__).resolve().parents[3] / "data"
+
+
+def default_pretuned_path(backend: str = "xla") -> Path:
+    """Path of the shipped pretuned database for ``backend``.
+
+    Looks for ``pretuned_<backend>.json`` then the generic ``pretuned.json``
+    under ``pretuned_dir()``; raises FileNotFoundError (with the tune-CLI
+    incantation) when neither exists.
+    """
+    root = pretuned_dir()
+    cands = [root / f"pretuned_{backend}.json", root / "pretuned.json"]
+    for c in cands:
+        if c.exists():
+            return c
+    raise FileNotFoundError(
+        f"no pretuned database for backend {backend!r} under {root} "
+        f"(looked for {', '.join(c.name for c in cands)}); generate one with "
+        f"`python -m repro.tools.tune --suite all --backend {backend} "
+        f"--out {cands[0]}`"
+    )
+
+
+def try_load_pretuned(backend: str = "xla") -> "TuningDatabase | None":
+    """The shipped pretuned database, or None when none is installed."""
+    try:
+        return TuningDatabase.load(default_pretuned_path(backend))
+    except FileNotFoundError:
+        return None
 
 
 @dataclass
@@ -43,8 +83,18 @@ class Entry:
 class TuningDatabase:
     entries: list[Entry] = field(default_factory=list)
     radius: float = 6.0
+    # Free-form tuning provenance (suite/size/backend/timestamp, written by
+    # ``repro.tools.tune``); persisted alongside the entries.
+    meta: dict = field(default_factory=dict)
+
+    _uid_counter = itertools.count()
 
     def __post_init__(self) -> None:
+        # Process-unique, never-reused instance token: cache keys derived
+        # from a database must use this (plus ``generation``), not ``id()``
+        # — a freed database's address can be reused by a new instance,
+        # which would let a module-global cache serve stale results.
+        self.uid = next(TuningDatabase._uid_counter)
         self._gen = 0
         self._by_fp: dict[str, int] = {}
         self._matrix: np.ndarray | None = None
@@ -78,7 +128,9 @@ class TuningDatabase:
         return self._gen
 
     def add(self, fingerprint: str, embedding: np.ndarray, recipe: Recipe,
-            provenance: str = "", measured_us: float | None = None) -> None:
+            provenance: str = "", measured_us: float | None = None) -> str:
+        """Insert or upgrade an entry; returns what happened:
+        ``'added'`` | ``'replaced'`` (better-measured recipe won) | ``'kept'``."""
         self._sync()
         i = self._by_fp.get(fingerprint)
         if i is not None:
@@ -87,12 +139,14 @@ class TuningDatabase:
             if measured_us is not None and (e.measured_us is None or measured_us < e.measured_us):
                 e.recipe, e.measured_us, e.provenance = recipe, measured_us, provenance
                 self._gen += 1
-            return
+                return "replaced"
+            return "kept"
         self.entries.append(Entry(fingerprint, np.asarray(embedding, dtype=np.float64),
                                   recipe, provenance, measured_us))
         self._by_fp[fingerprint] = len(self.entries) - 1
         self._matrix = None
         self._gen += 1
+        return "added"
 
     def lookup_exact(self, fingerprint: str) -> Recipe | None:
         self._sync()
@@ -118,6 +172,56 @@ class TuningDatabase:
         order = np.argsort(d, kind="stable")[:k]
         return [(float(d[i]), self.entries[i]) for i in order if d[i] <= self.radius]
 
+    def merge(self, other: "TuningDatabase") -> dict[str, int]:
+        """Fold ``other``'s entries into this database.
+
+        Incremental tuning runs compose: per fingerprint the better-measured
+        recipe wins (the same rule ``add`` applies), unknown fingerprints are
+        appended, tuning-run histories (``meta['runs']``) concatenate, and
+        ``other``'s remaining meta fills in missing keys.  Databases tuned
+        for different backends refuse to merge — their measurements were
+        taken under different lowerings and do not rank against each other.
+        Returns a report ``{'added': n, 'improved': n, 'kept': n}``.
+        """
+        mine = self.meta.get("backend")
+        theirs = other.meta.get("backend")
+        if mine and theirs and mine != theirs:
+            raise ValueError(
+                f"refusing to merge databases tuned for different backends "
+                f"({mine!r} vs {theirs!r}): their measurements do not rank "
+                "against each other"
+            )
+        report = {"added": 0, "improved": 0, "kept": 0}
+        label = {"added": "added", "replaced": "improved", "kept": "kept"}
+        for e in other.entries:
+            action = self.add(e.fingerprint, e.embedding, e.recipe,
+                              provenance=e.provenance, measured_us=e.measured_us)
+            report[label[action]] += 1
+        runs = list(self.meta.get("runs", []))
+        runs += [r for r in other.meta.get("runs", []) if r not in runs]
+        for k, v in other.meta.items():
+            self.meta.setdefault(k, v)
+        if runs:
+            self.meta["runs"] = runs
+        return report
+
+    def summary(self) -> dict:
+        """Size/provenance report: entry count, recipe-kind and provenance
+        histograms, how many entries carry a measurement, and the meta."""
+        kinds: dict[str, int] = {}
+        prov: dict[str, int] = {}
+        for e in self.entries:
+            kinds[e.recipe.kind] = kinds.get(e.recipe.kind, 0) + 1
+            key = e.provenance.rsplit(":", 1)[-1] if e.provenance else "unknown"
+            prov[key] = prov.get(key, 0) + 1
+        return {
+            "entries": len(self.entries),
+            "measured": sum(1 for e in self.entries if e.measured_us is not None),
+            "kinds": dict(sorted(kinds.items())),
+            "provenance": dict(sorted(prov.items())),
+            "meta": dict(self.meta),
+        }
+
     def lookup(self, fingerprint: str, embedding: np.ndarray) -> tuple[Recipe | None, str]:
         r = self.lookup_exact(fingerprint)
         if r is not None:
@@ -135,14 +239,17 @@ class TuningDatabase:
                 "embedding": e.embedding.tolist(),
                 "recipe": e.recipe.to_json(),
                 "provenance": e.provenance,
-                "measured_us": e.measured_us,
+                # inf/nan would serialize as the non-JSON token 'Infinity'
+                "measured_us": e.measured_us
+                if e.measured_us is not None and math.isfinite(e.measured_us)
+                else None,
             }
             for e in self.entries
         ]
-        Path(path).write_text(json.dumps(
-            {"version": SCHEMA_VERSION, "radius": self.radius, "entries": data},
-            indent=1,
-        ))
+        doc = {"version": SCHEMA_VERSION, "radius": self.radius, "entries": data}
+        if self.meta:
+            doc["meta"] = self.meta
+        Path(path).write_text(json.dumps(doc, indent=1))
 
     @staticmethod
     def load(path: str | Path) -> "TuningDatabase":
@@ -153,7 +260,7 @@ class TuningDatabase:
                 f"{path}: database version {version} is newer than supported "
                 f"({SCHEMA_VERSION})"
             )
-        db = TuningDatabase(radius=raw.get("radius", 6.0))
+        db = TuningDatabase(radius=raw.get("radius", 6.0), meta=raw.get("meta", {}))
         for d in raw["entries"]:
             db.entries.append(
                 Entry(d["fingerprint"], np.asarray(d["embedding"]),

@@ -84,7 +84,14 @@ def embed_nest(program: Program, nest: Node) -> np.ndarray:
         + stride_prof,
         dtype=np.float64,
     )
-    assert vec.shape == (10 + 2 * _MAX_DEPTH,) and DIM == 10 + 2 * _MAX_DEPTH + 2
+    # Explicit check (not ``assert``: embeddings key the persisted database,
+    # so a layout drift must fail loudly even under ``python -O``).
+    if vec.shape != (10 + 2 * _MAX_DEPTH,) or DIM != 10 + 2 * _MAX_DEPTH + 2:
+        raise RuntimeError(
+            f"embedding layout out of sync: {vec.shape[0]} features with "
+            f"_MAX_DEPTH={_MAX_DEPTH} but DIM={DIM}; update DIM when the "
+            "feature set changes"
+        )
     return np.concatenate([vec, [0.0, 0.0]])  # reserved slots
 
 

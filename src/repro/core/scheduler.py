@@ -18,7 +18,9 @@ for the rest, store recipes keyed by fingerprint + embedding.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field, replace
+from pathlib import Path
 from typing import Callable, Mapping, Sequence
 
 import jax
@@ -26,7 +28,7 @@ import numpy as np
 
 from .cache import CacheStats, CompilationCache
 from .codegen import compile_jax
-from .database import TuningDatabase
+from .database import TuningDatabase, default_pretuned_path
 from .embedding import embed_nest
 from .fusion import optimization_pipeline
 from .idioms import classify_nest
@@ -42,7 +44,13 @@ from .ir import (
 )
 from .passes import PassContext
 from .recipes import Recipe
-from .search import default_recipe_for, evolve_recipe, measure_recipe, schedule_from_recipe
+from .search import (
+    default_recipe_for,
+    evolve_recipe,
+    measure_recipe,
+    nest_rng_seed,
+    schedule_from_recipe,
+)
 
 
 @dataclass
@@ -64,13 +72,33 @@ class ProgramPlan:
 
 
 def nest_program(program: Program, nest: Node) -> Program:
-    """A standalone single-nest program (used for per-nest measurement)."""
+    """A standalone single-nest program (used for per-nest measurement).
+
+    Temps the nest *consumes* — reads before it has written them, i.e.
+    values produced by earlier nests of the full program — are demoted to
+    inputs of the standalone program.  ``random_inputs`` fills inputs only,
+    so keeping them as temps would measure every downstream nest on
+    zero-filled operands: degenerate data the deployed program never sees.
+    """
     arrays = {a.array for _, a in _nest_accesses(nest)}
+    temps = set(program.temps) & arrays
+    written: set[str] = set()
+    consumed: set[str] = set()
+    for c in nest_computations(nest):
+        for a in c.reads:
+            if a.array in temps and a.array not in written:
+                consumed.add(a.array)
+        # an accumulate write folds into the array's current value — the
+        # initial contents are consumed unless this nest wrote them first
+        if c.accumulate is not None and c.write.array in temps \
+                and c.write.array not in written:
+            consumed.add(c.write.array)
+        written.add(c.write.array)
     return Program(
         name=f"{program.name}:nest",
         arrays=tuple(a for a in program.arrays if a.name in arrays),
         body=(nest,),
-        temps=tuple(t for t in program.temps if t in arrays),
+        temps=tuple(t for t in program.temps if t in temps - consumed),
     )
 
 
@@ -154,12 +182,13 @@ class Daisy:
         return ctx
 
     def _plan_key(self, fp: str, normalize_first: bool) -> tuple:
-        # id(db) scopes entries to the database instance (self.db keeps it
-        # alive), so Daisy objects sharing one CompilationCache but holding
-        # different databases never exchange plans; generation expires plans
-        # resolved against older contents of the *same* database.
+        # db.uid scopes entries to the database instance (a process-unique
+        # token, unlike id(), which a later instance can reuse after GC), so
+        # Daisy objects sharing one CompilationCache but holding different
+        # databases never exchange plans; generation expires plans resolved
+        # against older contents of the *same* database.
         return (fp, normalize_first, self.fuse, self.interpret, self.backend,
-                id(self.db), self.db.generation)
+                self.db.uid, self.db.generation)
 
     def _backend_recipe(self, recipe: Recipe) -> Recipe:
         """Map a recipe onto the selected backend: under 'xla' the Pallas
@@ -214,59 +243,212 @@ class Daisy:
         return result
 
     # -- seeding (paper: A variants define the database) -----------------------
+    def _prepare_nest(self, p: Program, nest: Node, source: str) -> "_SeedItem":
+        # one standalone program + one input set per nest, reused by every
+        # measurement epoch
+        idiom = classify_nest(nest)
+        nprog = nest_program(p, nest)
+        return _SeedItem(fingerprint(nest), embed_nest(p, nest), idiom.kind,
+                         nprog, random_inputs(nprog),
+                         default_recipe_for(idiom), source)
+
+    def _measure_item(self, item: "_SeedItem", recipe: Recipe, repeats: int) -> float:
+        return measure_recipe(item.nprog, item.inputs,
+                              self._backend_recipe(recipe),
+                              repeats=repeats, interpret=self.interpret)
+
+    def _epoch1_item(
+        self, item: "_SeedItem", search: bool, iterations: int,
+        population: int, repeats: int,
+    ) -> tuple[Recipe, float, str]:
+        """Epoch-1 recipe for one nest: BLAS-3 takes the library-call recipe
+        directly (paper §4), everything else runs the evolutionary search."""
+        if item.idiom == "blas3":
+            t = self._measure_item(item, item.seed_recipe, repeats)
+            return item.seed_recipe, t, f"{item.source}:idiom"
+        return self._search_item(item, search, iterations, population, repeats)
+
+    def _add_measured(self, item: "_SeedItem", recipe: Recipe,
+                      provenance: str, t: float) -> None:
+        # a nest whose every candidate lowering failed (t = inf) ships no
+        # entry: plan() falls back to the default recipe at runtime, and the
+        # persisted JSON stays free of unvalidated recipes
+        if math.isfinite(t):
+            self.db.add(item.fingerprint, item.embedding, recipe,
+                        provenance=provenance, measured_us=t)
+
+    def _search_item(
+        self, item: "_SeedItem", search: bool, iterations: int,
+        population: int, repeats: int,
+    ) -> tuple[Recipe, float, str]:
+        if not search:
+            t = self._measure_item(item, item.seed_recipe, repeats)
+            return item.seed_recipe, t, f"{item.source}:analytic"
+        # candidates are timed as the backend will actually lower them
+        # (under 'xla' no Pallas kernel is built or measured; under
+        # 'pallas' the measurement compiles, never interprets)
+        best, t = evolve_recipe(
+            item.nprog, item.inputs, item.seed_recipe,
+            iterations=iterations, population=population,
+            rng_seed=nest_rng_seed(item.fingerprint),
+            resolve=self._backend_recipe,
+            interpret=self.interpret, repeats=repeats)
+        # store what was actually measured: under 'xla' a pallas-kind winner
+        # was timed (and will compile) as its degradation — persisting the
+        # raw kind would mislabel the database entry
+        return self._backend_recipe(best), t, f"{item.source}:search"
+
+    def _reseed_pool(self, fp: str, emb: np.ndarray, k: int = 10) -> list[Recipe]:
+        """Recipes of the most similar *other* nests for the transfer epoch.
+
+        The nest's own database entry (same fingerprint, distance 0) is
+        excluded — re-seeding a nest with its own recipe is a no-op that
+        would crowd genuinely foreign recipes out of the pool.
+        """
+        near = self.db.lookup_nearest(emb, k=k + 1)
+        return [e.recipe for _, e in near if e.fingerprint != fp][:k]
+
+    def _transfer_item(self, item: "_SeedItem", repeats: int = 3,
+                       iterations: int = 1) -> None:
+        fp = item.fingerprint
+        pool = self._reseed_pool(fp, item.embedding)
+        cur = self.db.lookup_exact(fp) or item.seed_recipe
+        best, t = evolve_recipe(
+            item.nprog, item.inputs, cur, iterations=iterations,
+            reseed_pool=pool,
+            rng_seed=nest_rng_seed(fp, salt="transfer:"),
+            resolve=self._backend_recipe,
+            interpret=self.interpret, repeats=repeats)
+        self._add_measured(item, self._backend_recipe(best),
+                           f"{item.source}:search+transfer", t)
+
+    def seed_nest(
+        self,
+        p: Program,
+        nest: Node,
+        search: bool = True,
+        search_iterations: int = 2,
+        population: int = 4,
+        repeats: int = 3,
+        source: str = "",
+    ) -> tuple[str, np.ndarray, Recipe, float, str]:
+        """Epoch-1 seeding of one canonical nest of a *normalized* program.
+
+        BLAS-3 nests take the library-call recipe directly (paper §4); the
+        rest run the evolutionary search.  All timings are taken under the
+        same lowering ``compile`` executes for this Daisy's backend.  Does
+        not touch the database — returns ``(fingerprint, embedding, recipe,
+        measured_us, provenance)`` so callers (``seed``, the tune CLI's
+        process-pool workers) add or merge the result themselves.
+        """
+        item = self._prepare_nest(p, nest, source or p.name)
+        recipe, t, prov = self._epoch1_item(
+            item, search, search_iterations, population, repeats)
+        return item.fingerprint, item.embedding, recipe, t, prov
+
     def seed(
         self,
         programs: Sequence[Program],
         search: bool = True,
         search_iterations: int = 2,
+        population: int = 4,
+        repeats: int = 3,
         verbose: bool = False,
     ) -> None:
-        pending: list[tuple[str, np.ndarray, Program, dict[str, np.ndarray], Recipe]] = []
+        pending: list[_SeedItem] = []
+        seen: set[str] = set()
         for prog in programs:
             p = self._normalized(prog)
             for nest in p.body:
                 fp = fingerprint(nest)
-                if self.db.lookup_exact(fp) is not None:
+                # dedupe against the database AND within this batch:
+                # identical canonical nests arising from different variants
+                # (the paper's central case) are searched once, not once per
+                # source program
+                if fp in seen or self.db.lookup_exact(fp) is not None:
                     continue
-                emb = embed_nest(p, nest)
-                idiom = classify_nest(nest)
-                seed_recipe = default_recipe_for(idiom)
-                # one standalone program + one input set per nest, reused by
-                # every measurement epoch below
-                nprog = nest_program(p, nest)
-                inputs = random_inputs(nprog)
-                if idiom.kind in ("blas3",):
-                    # BLAS-3: straight to the library-call recipe (paper §4)
-                    t = measure_recipe(nprog, inputs, self._backend_recipe(seed_recipe))
-                    self.db.add(fp, emb, seed_recipe, provenance=f"{prog.name}:idiom", measured_us=t)
-                    continue
-                pending.append((fp, emb, nprog, inputs, seed_recipe))
+                seen.add(fp)
+                pending.append(self._prepare_nest(p, nest, prog.name))
 
-        # epoch 1: evolutionary search per nest
-        results: list[tuple[str, np.ndarray, Recipe, float]] = []
-        for fp, emb, nprog, inputs, seed_recipe in pending:
-            if search:
-                # candidates are timed as the backend will actually lower
-                # them (under 'xla' no Pallas kernel is built or measured)
-                best, t = evolve_recipe(nprog, inputs, seed_recipe,
-                                        iterations=search_iterations,
-                                        resolve=self._backend_recipe)
-            else:
-                best, t = seed_recipe, measure_recipe(
-                    nprog, inputs, self._backend_recipe(seed_recipe))
-            results.append((fp, emb, best, t))
+        # epoch 1: library-call recipe for BLAS-3, evolutionary search else
+        for item in pending:
+            recipe, t, prov = self._epoch1_item(
+                item, search, search_iterations, population, repeats)
+            self._add_measured(item, recipe, prov, t)
             if verbose:
-                print(f"  seeded {fp[:60]} -> {best.kind} ({t:.0f}us)")
+                print(f"  seeded {item.fingerprint[:60]} -> {recipe.kind} ({t:.0f}us)")
 
         # epochs 2-3: re-seed each nest from its most similar nests' recipes
-        for fp, emb, best, t in results:
-            self.db.add(fp, emb, best, provenance="search", measured_us=t)
         if search:
-            for fp, emb, nprog, inputs, _ in pending:
-                near = self.db.lookup_nearest(emb, k=10)
-                pool = [e.recipe for _, e in near]
-                cur = self.db.lookup_exact(fp)
-                best, t = evolve_recipe(nprog, inputs, cur,
-                                        iterations=1, reseed_pool=pool,
-                                        resolve=self._backend_recipe)
-                self.db.add(fp, emb, best, provenance="search+transfer", measured_us=t)
+            for item in pending:
+                if item.idiom == "blas3":
+                    continue  # library-call recipes don't join the search
+                self._transfer_item(item, repeats=repeats)
+
+    def transfer_epoch(
+        self,
+        programs: Sequence[Program],
+        fingerprints: set[str] | None = None,
+        repeats: int = 3,
+        iterations: int = 1,
+    ) -> int:
+        """The paper's 2nd/3rd seeding epochs as a standalone pass: re-seed
+        each already-seeded nest of ``programs`` from the recipes of its most
+        similar database neighbours (own entry excluded) and keep the
+        better-measured winner.  ``fingerprints`` restricts the pass (the
+        tune CLI limits it to nests tuned in the current run so incremental
+        runs don't re-measure the whole database).  Returns the number of
+        nests re-seeded.
+        """
+        done = 0
+        seen: set[str] = set()
+        for prog in programs:
+            p = self._normalized(prog)
+            for nest in p.body:
+                fp = fingerprint(nest)
+                if fp in seen or self.db.lookup_exact(fp) is None:
+                    continue
+                if fingerprints is not None and fp not in fingerprints:
+                    continue
+                seen.add(fp)
+                item = self._prepare_nest(p, nest, prog.name)
+                if item.idiom == "blas3":
+                    continue  # library-call recipes don't join the search
+                self._transfer_item(item, repeats=repeats, iterations=iterations)
+                done += 1
+        return done
+
+    # -- pretuned deployments ---------------------------------------------------
+    @classmethod
+    def pretuned(
+        cls,
+        backend: str | None = "xla",
+        path: str | Path | None = None,
+        **kwargs,
+    ) -> "Daisy":
+        """A Daisy warmed with the shipped pretuned transfer-tuning database.
+
+        Loads ``data/pretuned_<backend>.json`` (written offline by
+        ``python -m repro.tools.tune``; directory overridable via
+        ``REPRO_PRETUNED_DIR``) so deployments resolve recipes from measured
+        tuning data instead of idiom defaults.  ``path`` overrides the
+        lookup entirely.  ``backend=None`` resolves to ``'xla'`` for both
+        the database *and* the execution backend — the Daisy must run the
+        lowering its recipes were measured under.
+        """
+        backend = backend or "xla"
+        p = Path(path) if path is not None else default_pretuned_path(backend)
+        return cls(db=TuningDatabase.load(p), backend=backend, **kwargs)
+
+
+@dataclass
+class _SeedItem:
+    """Per-nest state shared by every seeding epoch (built once per nest)."""
+
+    fingerprint: str
+    embedding: np.ndarray
+    idiom: str
+    nprog: Program
+    inputs: dict[str, np.ndarray]
+    seed_recipe: Recipe
+    source: str

@@ -8,7 +8,9 @@ re-seeds from the recipes of the most similar nests (transfer).
 """
 from __future__ import annotations
 
+import math
 import random
+import zlib
 from dataclasses import replace
 from typing import Callable, Mapping
 
@@ -94,18 +96,37 @@ def _mutate(recipe: Recipe, rng: random.Random) -> Recipe:
     return r
 
 
+def nest_rng_seed(fingerprint: str, salt: str = "") -> int:
+    """Deterministic per-nest RNG seed for the evolutionary search.
+
+    Every nest gets its own mutation stream (a shared fixed seed would walk
+    the identical mutation sequence for every nest in a batch), stable across
+    runs and processes so tuning is reproducible.
+    """
+    return zlib.crc32(f"{salt}{fingerprint}".encode()) & 0x7FFFFFFF
+
+
 def measure_recipe(
     nest_program: Program,
     inputs: Mapping[str, np.ndarray],
     recipe: Recipe,
     repeats: int = 3,
+    interpret: bool = True,
 ) -> float:
-    """Wall time (us) of one nest lowered under ``recipe``; inf on failure."""
+    """Wall time (us) of one nest lowered under ``recipe``; inf on failure.
+
+    ``interpret`` must match the lowering the deployment backend executes
+    (``Daisy`` threads its own flag here): under ``backend='pallas'`` fitness
+    taken from interpret-mode Pallas kernels does not rank like the compiled
+    kernels ``Daisy.compile`` later runs.  Non-finite timings are rejected
+    (reported as inf) so a broken measurement can never win selection.
+    """
     try:
-        sched = schedule_from_recipe(recipe)
+        sched = schedule_from_recipe(recipe, interpret=interpret)
         fn = jax.jit(compile_jax(nest_program, sched))
         args = {k: np.asarray(v, dtype=np.float32) for k, v in inputs.items()}
-        return time_fn(lambda: fn(args), repeats=repeats)
+        t = time_fn(lambda: fn(args), repeats=repeats)
+        return t if math.isfinite(t) else float("inf")
     except Exception:
         return float("inf")
 
@@ -119,6 +140,8 @@ def evolve_recipe(
     rng_seed: int = 0,
     reseed_pool: list[Recipe] | None = None,
     resolve: Callable[[Recipe], Recipe] | None = None,
+    interpret: bool = True,
+    repeats: int = 3,
 ) -> tuple[Recipe, float]:
     """Mutation+selection over recipes, runtime fitness (paper's epochs).
 
@@ -129,7 +152,9 @@ def evolve_recipe(
     the lowering the deployment backend will actually run before timing it,
     so fitness measures what ``compile()`` later executes — under the 'xla'
     backend Pallas-kind mutants are timed as their vectorize/einsum
-    degradations and no Pallas kernel is ever built.
+    degradations and no Pallas kernel is ever built.  ``interpret`` is the
+    other half of that contract: it selects interpret vs compiled Pallas,
+    exactly as ``Daisy.compile`` does for the chosen backend.
     """
     rng = random.Random(rng_seed)
     pop = [seed_recipe] + [_mutate(seed_recipe, rng) for _ in range(population - 1)]
@@ -144,7 +169,9 @@ def evolve_recipe(
     def fitness(r: Recipe) -> float:
         key = resolve(r) if resolve is not None else r
         if key not in timed:
-            timed[key] = measure_recipe(nest_program, inputs, key)
+            timed[key] = measure_recipe(
+                nest_program, inputs, key, repeats=repeats, interpret=interpret
+            )
         return timed[key]
 
     best, best_t = seed_recipe, fitness(seed_recipe)

@@ -122,6 +122,32 @@ def seed_model_database(db: TuningDatabase) -> None:
     )
 
 
+_DEPLOYMENT_DBS: dict[str, TuningDatabase] = {}
+
+
+def deployment_database(backend: str = "xla") -> TuningDatabase:
+    """The database a deployment starts from.
+
+    The shipped pretuned transfer database (``data/pretuned_<backend>.json``,
+    written offline by ``repro.tools.tune``) when installed — so engines and
+    trainers start warm on measured recipes — plus the canonical-GEMM model
+    seed on top (``add`` never downgrades a measured entry).
+
+    One *shared* instance per backend: re-created engines and restarted
+    trainers resolve against the same object, so content-keyed caches
+    (kernel reports, plans) hit across instances; seeding it with new
+    recipes bumps its generation and expires those caches coherently.
+    """
+    from ..core.database import try_load_pretuned
+
+    db = _DEPLOYMENT_DBS.get(backend)
+    if db is None:
+        db = try_load_pretuned(backend) or TuningDatabase()
+        seed_model_database(db)
+        _DEPLOYMENT_DBS[backend] = db
+    return db
+
+
 def plan_model(cfg: ModelConfig, seq: int, batch: int, db: TuningDatabase | None = None) -> list[ContractionPlan]:
     db = db or TuningDatabase()
     if not db.entries:

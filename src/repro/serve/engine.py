@@ -22,6 +22,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core.cache import fingerprint_obj, jit_cache
+from ..core.database import TuningDatabase
 from ..models import model as M
 
 
@@ -47,8 +48,16 @@ class ServingEngine:
     """Single-host engine; under pjit the same step functions shard over the
     mesh (batch -> data axis, heads/experts -> model axis)."""
 
-    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
+                 tuning_db: TuningDatabase | None = None):
+        from ..models.lowering import deployment_database
+
         self.cfg, self.params, self.scfg = cfg, params, scfg
+        # Deployments start warm: recipe resolution for this engine's
+        # contractions runs against the shipped pretuned transfer database
+        # (plus the canonical-GEMM model seed) unless the caller stages its
+        # own tuning data.
+        self.tuning_db = tuning_db if tuning_db is not None else deployment_database()
         # One jitted decode step per config *content*: re-created engines
         # with an equal config share the function and its jax trace cache,
         # so slot refills and engine restarts never retrace.
@@ -71,9 +80,11 @@ class ServingEngine:
 
         return jit_cache.get_or_build(
             ("serve.kernel_report",
-             fingerprint_obj(self.cfg, self.scfg.max_len, self.scfg.batch_slots)),
+             fingerprint_obj(self.cfg, self.scfg.max_len, self.scfg.batch_slots),
+             self.tuning_db.uid, self.tuning_db.generation),
             lambda: kernel_report(
-                self.cfg, seq=self.scfg.max_len, batch=self.scfg.batch_slots
+                self.cfg, seq=self.scfg.max_len, batch=self.scfg.batch_slots,
+                db=self.tuning_db,
             ),
         )
 

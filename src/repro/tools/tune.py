@@ -1,0 +1,251 @@
+"""Offline transfer tuning: seed the recipe database from the A variants.
+
+Usage:
+    PYTHONPATH=src python -m repro.tools.tune --suite polybench --size mini
+    PYTHONPATH=src python -m repro.tools.tune --suite all --size bench \
+        --backend xla --jobs 2 --out data/pretuned_xla.json
+
+Runs ``Daisy.seed``'s evolutionary search (paper §4, "Seeding a Scheduling
+Database") over the selected suite — the PolyBench A variants and/or the two
+CLOUDSC programs — fanning the per-nest epoch-1 searches across a process
+pool, then runs the cross-nest transfer epoch (the paper's epochs 2-3) in
+the parent and persists the database.
+
+Re-running against an existing ``--out`` composes: the file is loaded
+first, already-tuned fingerprints are skipped, and new results merge in
+(per fingerprint the better-measured recipe wins).  The written file is
+what ``Daisy.pretuned(backend=...)`` loads at deployment time.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
+from multiprocessing import get_context
+from pathlib import Path
+
+import numpy as np
+
+from ..core import Daisy, Program, TuningDatabase, fingerprint
+from ..core.database import pretuned_dir
+from ..core.recipes import Recipe
+
+SUITES = ("polybench", "cloudsc", "all")
+BACKENDS = ("xla", "pallas_interpret", "pallas")
+
+
+def program_specs(suite: str, names: list[str] | None = None) -> list[tuple[str, str]]:
+    """(source, name) coordinates of every program the suite tunes."""
+    specs: list[tuple[str, str]] = []
+    if suite in ("polybench", "all"):
+        from ..polybench import BENCHMARKS
+
+        sel = names or list(BENCHMARKS)
+        unknown = [n for n in sel if n not in BENCHMARKS]
+        if unknown:
+            raise SystemExit(
+                f"unknown benchmark(s) {', '.join(unknown)}; "
+                f"valid: {', '.join(BENCHMARKS)}"
+            )
+        specs += [("polybench", n) for n in sel]
+    if suite in ("cloudsc", "all"):
+        specs += [("cloudsc", "erosion"), ("cloudsc", "scheme")]
+    return specs
+
+
+def build_program(source: str, name: str, size: str) -> Program:
+    """Rebuild a program from its registry coordinates (IR computations hold
+    lambdas, which do not pickle — workers reconstruct instead of receiving)."""
+    if source == "polybench":
+        from ..polybench import BENCHMARKS
+
+        return BENCHMARKS[name].make("a", size)
+    from ..cloudsc import erosion_program, mini_cloudsc_program
+
+    nproma, klev = (128, 137) if size == "bench" else (8, 5)
+    if name == "erosion":
+        return erosion_program(nproma=nproma, klev=4 if size == "mini" else klev)
+    return mini_cloudsc_program(nproma=nproma, klev=klev)
+
+
+def _tune_nest(task: dict) -> dict:
+    """Process-pool worker: epoch-1 search for one canonical nest.
+
+    Rebuilds and re-normalizes the program — the pass pipeline is
+    deterministic, so ``nest_index`` addresses the same canonical nest the
+    parent enumerated (the fingerprint check below enforces it).
+    """
+    prog = build_program(task["source"], task["name"], task["size"])
+    d = Daisy(backend=task["backend"])
+    p = d._normalized(prog)
+    nest = p.body[task["nest_index"]]
+    # fail fast, before the search burns its compile+measure budget
+    if fingerprint(nest) != task["fingerprint"]:
+        raise RuntimeError(
+            f"normalization diverged between parent and worker for "
+            f"{task['name']} nest {task['nest_index']}"
+        )
+    fp, emb, recipe, t, prov = d.seed_nest(
+        p, nest, search=task["search"], search_iterations=task["iterations"],
+        population=task["population"], repeats=task["repeats"],
+    )
+    return {"fingerprint": fp, "embedding": np.asarray(emb).tolist(),
+            "recipe": recipe.to_json(), "measured_us": t, "provenance": prov}
+
+
+def _run_tasks(tasks: list[dict], jobs: int, verbose: bool) -> list[dict]:
+    if jobs <= 1 or len(tasks) <= 1:
+        out = []
+        for i, t in enumerate(tasks):
+            r = _tune_nest(t)
+            if verbose:
+                print(f"  [{i + 1}/{len(tasks)}] {t['name']} nest {t['nest_index']}"
+                      f" -> {r['recipe']['kind']} ({r['measured_us']:.0f}us)")
+            out.append(r)
+        return out
+    # spawn, not fork: workers must initialize their own JAX runtime rather
+    # than inherit the parent's (forked XLA thread pools deadlock)
+    ctx = get_context("spawn")
+    results: list[dict] = []
+    with ProcessPoolExecutor(max_workers=jobs, mp_context=ctx) as ex:
+        futs = {ex.submit(_tune_nest, t): t for t in tasks}
+        pending = set(futs)
+        while pending:
+            done, pending = wait(pending, return_when=FIRST_COMPLETED)
+            for f in done:
+                t = futs[f]
+                r = f.result()
+                if verbose:
+                    print(f"  [{len(results) + 1}/{len(tasks)}] {t['name']} "
+                          f"nest {t['nest_index']} -> {r['recipe']['kind']} "
+                          f"({r['measured_us']:.0f}us)", flush=True)
+                results.append(r)
+    return results
+
+
+def tune(
+    suite: str = "all",
+    size: str = "mini",
+    backend: str = "xla",
+    out: str | Path | None = None,
+    names: list[str] | None = None,
+    jobs: int = 1,
+    iterations: int = 2,
+    population: int = 4,
+    repeats: int = 3,
+    search: bool = True,
+    transfer: bool = True,
+    verbose: bool = True,
+) -> tuple[TuningDatabase, Path]:
+    """Tune the suite and persist/merge the database at ``out``."""
+    out = Path(out) if out is not None else pretuned_dir() / f"pretuned_{backend}.json"
+    db = TuningDatabase.load(out) if out.exists() else TuningDatabase()
+    before = len(db.entries)
+
+    # enumerate distinct canonical nests (normalization is pure IR work —
+    # no JAX computation runs in the parent before the pool spins up)
+    scout = Daisy(backend=backend)
+    specs = program_specs(suite, names)
+    progs: list[Program] = []
+    tasks: list[dict] = []
+    seen: set[str] = set()
+    for source, name in specs:
+        prog = build_program(source, name, size)
+        progs.append(prog)
+        p = scout._normalized(prog)
+        for i, nest in enumerate(p.body):
+            fp = fingerprint(nest)
+            if fp in seen or db.lookup_exact(fp) is not None:
+                continue
+            seen.add(fp)
+            tasks.append({
+                "source": source, "name": name, "size": size, "nest_index": i,
+                "backend": backend, "search": search, "iterations": iterations,
+                "population": population, "repeats": repeats, "fingerprint": fp,
+            })
+    if verbose:
+        print(f"tuning {len(tasks)} nests ({len(specs)} programs, suite={suite}, "
+              f"size={size}, backend={backend}, jobs={jobs}, "
+              f"{before} entries already tuned)")
+
+    # epoch 1, fanned across the pool
+    t0 = time.perf_counter()
+    for r in _run_tasks(tasks, jobs, verbose):
+        if not np.isfinite(r["measured_us"]):
+            # every candidate lowering failed for this nest: ship no entry
+            # (plan() falls back to the default recipe) rather than an
+            # unvalidated recipe with an inf measurement
+            print(f"  WARNING: no measurable lowering for {r['provenance']} "
+                  f"({r['fingerprint'][:50]}); skipped")
+            continue
+        db.add(r["fingerprint"], np.asarray(r["embedding"]),
+               Recipe.from_json(r["recipe"]),
+               provenance=r["provenance"], measured_us=r["measured_us"])
+
+    # epochs 2-3 (cross-nest transfer) need the merged database: run in the
+    # parent, restricted to this run's nests so incremental runs compose
+    if transfer and search and tasks:
+        d = Daisy(db=db, backend=backend)
+        n = d.transfer_epoch(progs, fingerprints=seen, repeats=repeats)
+        if verbose:
+            print(f"transfer epoch re-seeded {n} nests")
+
+    # last run's coordinates at the top level, full history under "runs"
+    # (incremental runs compose — a single suite/size would misdescribe
+    # a database tuned across several)
+    run_rec = {
+        "suite": suite, "size": size, "backend": backend,
+        "tuned_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "search_iterations": iterations, "population": population,
+        "nests_tuned": len(tasks),
+    }
+    db.meta.update(run_rec)
+    db.meta.setdefault("runs", []).append(run_rec)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    db.save(out)
+    if verbose:
+        s = db.summary()
+        print(f"wrote {out} in {time.perf_counter() - t0:.0f}s: "
+              f"{s['entries']} entries (+{s['entries'] - before}), "
+              f"{s['measured']} measured")
+        print(f"  kinds: {s['kinds']}")
+        print(f"  provenance: {s['provenance']}")
+    return db, out
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--suite", default="all", choices=SUITES)
+    ap.add_argument("--size", default="mini", choices=["mini", "bench"])
+    ap.add_argument("--backend", default="xla", choices=BACKENDS,
+                    help="measure under the lowering this backend executes")
+    ap.add_argument("--out", default=None,
+                    help="database path (default: data/pretuned_<backend>.json; "
+                         "an existing file is merged into, not overwritten)")
+    ap.add_argument("--names", default=None,
+                    help="comma-separated polybench subset (e.g. gemm,bicg)")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="process-pool width for the per-nest searches "
+                         "(default: min(4, cpu count); <=1 runs in-process)")
+    ap.add_argument("--iterations", type=int, default=2,
+                    help="evolutionary search iterations per nest (epoch 1)")
+    ap.add_argument("--population", type=int, default=4)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timing repeats per candidate measurement")
+    ap.add_argument("--no-search", dest="search", action="store_false",
+                    help="analytic seeding only (idiom default recipes, measured)")
+    ap.add_argument("--no-transfer", dest="transfer", action="store_false",
+                    help="skip the cross-nest transfer epoch")
+    args = ap.parse_args(argv)
+    jobs = args.jobs if args.jobs is not None else min(4, os.cpu_count() or 1)
+    tune(
+        suite=args.suite, size=args.size, backend=args.backend, out=args.out,
+        names=args.names.split(",") if args.names else None, jobs=jobs,
+        iterations=args.iterations, population=args.population,
+        repeats=args.repeats, search=args.search, transfer=args.transfer,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core.cache import fingerprint_obj, jit_cache
+from ..core.database import TuningDatabase
 from ..data.pipeline import DataConfig, LMDataPipeline
 from ..models import model as M
 from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
@@ -127,8 +128,14 @@ class Trainer:
         data_cfg: DataConfig,
         tcfg: TrainerConfig,
         seed: int = 0,
+        tuning_db: TuningDatabase | None = None,
     ):
+        from ..models.lowering import deployment_database
+
         self.cfg, self.opt_cfg, self.tcfg = cfg, opt_cfg, tcfg
+        # Deployments start warm: kernel planning resolves against the
+        # shipped pretuned transfer database unless the caller stages its own.
+        self.tuning_db = tuning_db if tuning_db is not None else deployment_database()
         self.data = LMDataPipeline(data_cfg)
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
         self.monitor = StragglerMonitor()
@@ -156,9 +163,11 @@ class Trainer:
         dcfg = self.data.cfg
         return jit_cache.get_or_build(
             ("train.kernel_report",
-             fingerprint_obj(self.cfg, dcfg.seq_len, dcfg.global_batch)),
+             fingerprint_obj(self.cfg, dcfg.seq_len, dcfg.global_batch),
+             self.tuning_db.uid, self.tuning_db.generation),
             lambda: kernel_report(
-                self.cfg, seq=dcfg.seq_len, batch=dcfg.global_batch
+                self.cfg, seq=dcfg.seq_len, batch=dcfg.global_batch,
+                db=self.tuning_db,
             ),
         )
 

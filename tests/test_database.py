@@ -1,0 +1,147 @@
+"""TuningDatabase persistence (v1 + v2), merge composition, reporting."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import Recipe, TuningDatabase
+
+
+def _db(entries, radius=6.0, meta=None):
+    db = TuningDatabase(radius=radius, meta=meta or {})
+    for fp, emb, recipe, prov, us in entries:
+        db.add(fp, np.asarray(emb, np.float64), recipe, provenance=prov,
+               measured_us=us)
+    return db
+
+
+def test_save_load_roundtrip_v2(tmp_path):
+    db = _db(
+        [("fpA", [1.0, 2.0], Recipe(kind="einsum", notes="a"), "p1:idiom", 12.5),
+         ("fpB", [3.0, 4.0], Recipe(kind="pallas_nest", tile=(8, 128)), "p1:search", 7.0),
+         ("fpC", [5.0, 6.0], Recipe(kind="vectorize"), "p2:search", None)],
+        radius=9.5, meta={"suite": "polybench", "backend": "xla"},
+    )
+    p = tmp_path / "db.json"
+    db.save(p)
+    raw = json.loads(p.read_text())
+    assert raw["version"] == 2 and raw["meta"]["suite"] == "polybench"
+
+    loaded = TuningDatabase.load(p)
+    assert loaded.radius == 9.5
+    assert loaded.meta == {"suite": "polybench", "backend": "xla"}
+    assert len(loaded.entries) == 3
+    for e, l in zip(db.entries, loaded.entries):
+        assert e.fingerprint == l.fingerprint
+        assert e.recipe == l.recipe  # includes the tile tuple round-trip
+        assert e.provenance == l.provenance
+        assert e.measured_us == l.measured_us
+        np.testing.assert_allclose(e.embedding, l.embedding)
+    # loaded database is queryable immediately (index rebuilt)
+    assert loaded.lookup_exact("fpB").kind == "pallas_nest"
+
+
+def test_load_v1_unversioned_file(tmp_path):
+    p = tmp_path / "v1.json"
+    p.write_text(json.dumps({
+        "radius": 4.0,
+        "entries": [{"fingerprint": "old", "embedding": [1.0, 1.0],
+                     "recipe": Recipe(kind="einsum").to_json()}],
+    }))
+    db = TuningDatabase.load(p)
+    assert db.radius == 4.0 and db.meta == {}
+    assert db.lookup_exact("old").kind == "einsum"
+    assert db.entries[0].measured_us is None  # v1 carried no measurement
+
+
+def test_load_rejects_newer_version(tmp_path):
+    p = tmp_path / "future.json"
+    p.write_text(json.dumps({"version": 99, "entries": []}))
+    with pytest.raises(ValueError, match="newer than supported"):
+        TuningDatabase.load(p)
+
+
+def test_merge_composes_and_reports():
+    base = _db([("fpA", [0.0, 0.0], Recipe(kind="einsum"), "run1", 10.0),
+                ("fpB", [1.0, 1.0], Recipe(kind="vectorize"), "run1", 20.0)])
+    incoming = _db([
+        ("fpB", [1.0, 1.0], Recipe(kind="einsum"), "run2", 5.0),     # better
+        ("fpA", [0.0, 0.0], Recipe(kind="sequential"), "run2", 50.0),  # worse
+        ("fpC", [2.0, 2.0], Recipe(kind="pallas_gemm", tile=(128, 128, 128)),
+         "run2", 3.0),                                               # new
+    ], meta={"suite": "cloudsc"})
+    gen = base.generation
+    report = base.merge(incoming)
+    assert report == {"added": 1, "improved": 1, "kept": 1}
+    assert len(base.entries) == 3
+    # the better-measured recipe won; the worse one was kept out
+    assert base.lookup_exact("fpB").kind == "einsum"
+    assert base.lookup_exact("fpA").kind == "einsum"
+    assert base.lookup_exact("fpC").kind == "pallas_gemm"
+    assert base.generation > gen  # cached plans against the old contents expire
+    assert base.meta["suite"] == "cloudsc"  # missing meta keys fill in
+
+
+def test_merge_refuses_backend_mismatch():
+    a = _db([("f1", [0.0], Recipe(), "t", 1.0)], meta={"backend": "xla"})
+    b = _db([("f2", [1.0], Recipe(), "t", 1.0)], meta={"backend": "pallas"})
+    with pytest.raises(ValueError, match="different backends"):
+        a.merge(b)
+    assert len(a.entries) == 1  # refused before touching entries
+
+
+def test_merge_concatenates_run_history():
+    a = _db([("f1", [0.0], Recipe(), "t", 1.0)],
+            meta={"backend": "xla", "runs": [{"suite": "polybench"}]})
+    b = _db([("f2", [1.0], Recipe(), "t", 1.0)],
+            meta={"backend": "xla", "runs": [{"suite": "cloudsc"}]})
+    a.merge(b)
+    assert a.meta["runs"] == [{"suite": "polybench"}, {"suite": "cloudsc"}]
+
+
+def test_merge_roundtrips_through_files(tmp_path):
+    """The tune CLI's incremental path: load, merge, save, load."""
+    a, b = tmp_path / "a.json", tmp_path / "b.json"
+    _db([("fp1", [0.0], Recipe(kind="einsum"), "t1", 1.0)]).save(a)
+    _db([("fp2", [9.0], Recipe(kind="vectorize"), "t2", 2.0)]).save(b)
+    db = TuningDatabase.load(a)
+    db.merge(TuningDatabase.load(b))
+    db.save(a)
+    final = TuningDatabase.load(a)
+    assert {e.fingerprint for e in final.entries} == {"fp1", "fp2"}
+
+
+def test_add_returns_action():
+    db = TuningDatabase()
+    assert db.add("f", np.array([0.0]), Recipe(), measured_us=2.0) == "added"
+    assert db.add("f", np.array([0.0]), Recipe(kind="einsum"),
+                  measured_us=1.0) == "replaced"
+    assert db.add("f", np.array([0.0]), Recipe(kind="sequential"),
+                  measured_us=9.0) == "kept"
+    assert db.lookup_exact("f").kind == "einsum"
+
+
+def test_save_sanitizes_nonfinite_measurements(tmp_path):
+    """inf/nan must never reach the JSON file (json would emit the
+    non-standard 'Infinity' token, breaking strict parsers)."""
+    db = _db([("f", [0.0], Recipe(), "x", float("inf"))])
+    p = tmp_path / "db.json"
+    db.save(p)
+    assert "Infinity" not in p.read_text()
+    assert TuningDatabase.load(p).entries[0].measured_us is None
+
+
+def test_database_uid_is_unique_per_instance():
+    a, b = TuningDatabase(), TuningDatabase()
+    assert a.uid != b.uid
+    assert TuningDatabase().uid > b.uid  # monotone: never reused
+
+
+def test_summary_reports_size_and_provenance():
+    db = _db([("f1", [0.0], Recipe(kind="einsum"), "gemm:idiom", 1.0),
+              ("f2", [1.0], Recipe(kind="einsum"), "gemm:search", 2.0),
+              ("f3", [2.0], Recipe(kind="vectorize"), "bicg:search+transfer", None)])
+    s = db.summary()
+    assert s["entries"] == 3 and s["measured"] == 2
+    assert s["kinds"] == {"einsum": 2, "vectorize": 1}
+    assert s["provenance"] == {"idiom": 1, "search": 1, "search+transfer": 1}

@@ -99,6 +99,127 @@ def test_model_lowering_plans():
         assert axes <= {"data", "model"}
 
 
+def test_seed_measures_under_backend_lowering(monkeypatch):
+    """Regression (PR-4): seeding fitness must be taken under the same
+    lowering ``Daisy.compile`` executes — under ``backend='pallas'`` no
+    interpret-mode Pallas measurement may happen."""
+    from repro.core import search as S
+
+    captured = []
+
+    def fake_compile(prog, sched):
+        captured.append(sched)
+        return lambda args: {}
+
+    monkeypatch.setattr(S, "compile_jax", fake_compile)
+    progs = [BENCHMARKS["gemm"].make("a", "mini")]
+    Daisy(backend="pallas").seed(progs, search=False)
+    assert captured, "seeding measured nothing"
+    assert all(s.interpret is False for s in captured)
+
+    captured.clear()
+    Daisy(backend="pallas_interpret").seed(progs, search=False)
+    assert captured and all(s.interpret is True for s in captured)
+
+
+def test_seed_dedupes_identical_nests_across_programs(monkeypatch):
+    """Identical canonical nests arising from different source programs (the
+    paper's central case) are measured once, not once per program."""
+    from repro.core import scheduler as SCH
+
+    calls = []
+
+    def counting_measure(nprog, inputs, recipe, repeats=3, interpret=True):
+        calls.append(nprog.name)
+        return 1.0
+
+    monkeypatch.setattr(SCH, "measure_recipe", counting_measure)
+    d = Daisy()
+    prog = BENCHMARKS["gemm"].make("a", "mini")
+    n_nests = len(d._normalized(prog).body)
+    d.seed([prog, BENCHMARKS["gemm"].make("a", "mini")], search=False)
+    assert len(calls) == n_nests  # the duplicate program added zero work
+
+
+def test_reseed_pool_excludes_own_entry():
+    """Epoch-2 reseeding must not hand a nest its own recipe back (same
+    fingerprint, distance 0)."""
+    d = Daisy()
+    pa = normalize(BENCHMARKS["gemm"].make("a", "mini"))
+    nest = pa.body[1]
+    fp, emb = fingerprint(nest), embed_nest(pa, nest)
+    d.db.add(fp, emb, Recipe(kind="einsum", notes="SELF"), provenance="self")
+    d.db.add("other-near", emb + 0.05, Recipe(kind="vectorize", notes="OTHER"),
+             provenance="near")
+    pool = d._reseed_pool(fp, emb)
+    assert [r.notes for r in pool] == ["OTHER"]
+
+
+def test_rng_seed_varies_per_nest():
+    from repro.core.search import nest_rng_seed
+
+    assert nest_rng_seed("fpA") != nest_rng_seed("fpB")
+    assert nest_rng_seed("fpA") == nest_rng_seed("fpA")  # stable across runs
+    assert nest_rng_seed("fpA", salt="transfer:") != nest_rng_seed("fpA")
+
+
+def test_nest_program_randomizes_consumed_temps():
+    """A nest consuming a temp produced by an earlier nest must measure on
+    randomized data, not the zero-fill (the standalone program treats the
+    consumed temp as an input)."""
+    p = normalize(BENCHMARKS["2mm"].make("b", "mini"))
+    consuming = [n for n in p.body
+                 if any("tmp" in {a.array for a in c.reads}
+                        for c in _comps(n))]
+    assert consuming, "expected a nest reading the tmp temp"
+    for nest in consuming:
+        nprog = nest_program(p, nest)
+        assert "tmp" not in nprog.temps
+        inp = random_inputs(nprog)
+        assert "tmp" in inp and np.abs(inp["tmp"]).min() > 0
+
+
+def test_nest_program_keeps_self_defined_temps():
+    """A temp fully written by the nest before any read stays a temp."""
+    from repro.core import Array, Computation, Loop, Program, acc
+
+    zero = Computation("z", acc("T", "i"), (), lambda: 0.0)
+    use = Computation("u", acc("Y", "i"), (acc("T", "i"),), lambda t: t + 1.0)
+    p = Program("selfdef", (Array("T", (8,)), Array("Y", (8,))),
+                (Loop("i", 8, body=(zero, use)),), temps=("T",))
+    nprog = nest_program(p, p.body[0])
+    assert nprog.temps == ("T",)
+    assert "T" not in random_inputs(nprog)
+
+
+def _comps(nest):
+    from repro.core.ir import nest_computations
+
+    return nest_computations(nest)
+
+
+def test_measure_recipe_rejects_nonfinite_timing(monkeypatch):
+    from repro.core import search as S
+
+    monkeypatch.setattr(S, "time_fn", lambda fn, repeats=3, **kw: float("nan"))
+    prog = normalize(BENCHMARKS["gemm"].make("a", "mini"))
+    nprog = nest_program(prog, prog.body[0])
+    t = S.measure_recipe(nprog, random_inputs(nprog), Recipe(kind="vectorize"))
+    assert t == float("inf")
+
+
+def test_seed_ships_no_entry_for_unmeasurable_nests(monkeypatch):
+    """A nest whose every candidate lowering fails (fitness inf) must not
+    land in the database — plan() falls back to defaults instead."""
+    from repro.core import scheduler as SCH
+
+    monkeypatch.setattr(SCH, "measure_recipe",
+                        lambda *a, **k: float("inf"))
+    d = Daisy()
+    d.seed([BENCHMARKS["gemm"].make("a", "mini")], search=False)
+    assert d.db.entries == []
+
+
 def test_evolutionary_search_returns_usable_recipe():
     """Paper §4 seeding: evolutionary search (mutation+selection, runtime
     fitness) must return a recipe no slower than the analytic seed."""

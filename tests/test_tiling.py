@@ -334,8 +334,9 @@ def test_evolve_recipe_measures_each_candidate_once(monkeypatch):
     from repro.core import search
 
     calls = []
-    monkeypatch.setattr(search, "measure_recipe",
-                        lambda prog, inputs, r, repeats=3: calls.append(r) or 1.0)
+    monkeypatch.setattr(
+        search, "measure_recipe",
+        lambda prog, inputs, r, repeats=3, interpret=True: calls.append(r) or 1.0)
     prog = normalize(BENCHMARKS["gemm"].make("a", "mini"))
     from repro.core.scheduler import nest_program
 

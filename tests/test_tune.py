@@ -1,0 +1,130 @@
+"""The offline tuning CLI: database production, pretuned loading, composition."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core import Daisy, TuningDatabase, fingerprint, normalize
+from repro.polybench import BENCHMARKS
+from repro.tools import tune as T
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def test_program_specs_validates_names():
+    assert ("polybench", "gemm") in T.program_specs("polybench")
+    assert ("cloudsc", "scheme") in T.program_specs("all")
+    assert T.program_specs("cloudsc") == [("cloudsc", "erosion"), ("cloudsc", "scheme")]
+    with pytest.raises(SystemExit, match="unknown benchmark"):
+        T.program_specs("polybench", ["gemm", "nope"])
+
+
+def test_tune_produces_pretuned_database(tmp_path):
+    out = tmp_path / "tuned.json"
+    db, path = T.tune(suite="polybench", size="mini", backend="xla", out=out,
+                      names=["gemm", "bicg"], jobs=0, search=False,
+                      repeats=1, verbose=False)
+    assert path == out and out.exists()
+    assert db.meta["suite"] == "polybench" and db.meta["backend"] == "xla"
+    assert all(e.measured_us is not None for e in db.entries)
+
+    # Daisy.pretuned loads it and the B variant resolves via exact transfer
+    d = Daisy.pretuned(backend="xla", path=out)
+    fn, plan = d.compile(BENCHMARKS["gemm"].make("b", "mini"))
+    assert all(p.source == "exact" for p in plan.nests)
+    from repro.core.scheduler import random_inputs
+
+    prog = BENCHMARKS["gemm"].make("b", "mini")
+    out_arrays = fn(random_inputs(prog))
+    assert out_arrays["C"].shape == (20, 24)
+
+
+def test_tune_incremental_runs_compose(tmp_path):
+    out = tmp_path / "tuned.json"
+    db1, _ = T.tune(suite="polybench", size="mini", backend="xla", out=out,
+                    names=["gemm"], jobs=0, search=False, repeats=1,
+                    verbose=False)
+    fps1 = {e.fingerprint for e in db1.entries}
+    db2, _ = T.tune(suite="polybench", size="mini", backend="xla", out=out,
+                    names=["gemm", "bicg"], jobs=0, search=False, repeats=1,
+                    verbose=False)
+    fps2 = {e.fingerprint for e in db2.entries}
+    assert fps1 < fps2  # first run's entries survive, second adds bicg's
+    # already-tuned fingerprints are skipped, not re-measured: the gemm
+    # entries are byte-identical across runs
+    for e1 in db1.entries:
+        e2 = db2.entries[db2._by_fp[e1.fingerprint]]
+        assert (e1.recipe, e1.measured_us) == (e2.recipe, e2.measured_us)
+
+
+def test_tune_main_cli(tmp_path):
+    out = tmp_path / "cli.json"
+    T.main(["--suite", "polybench", "--names", "gemm", "--size", "mini",
+            "--backend", "xla", "--jobs", "0", "--no-search", "--repeats", "1",
+            "--out", str(out)])
+    db = TuningDatabase.load(out)
+    assert db.entries and db.meta["size"] == "mini"
+
+
+def test_worker_task_matches_parent_enumeration():
+    """The pool worker re-normalizes from registry coordinates and must land
+    on the same canonical nest the parent enumerated."""
+    p = normalize(BENCHMARKS["gemm"].make("a", "mini"))
+    task = {"source": "polybench", "name": "gemm", "size": "mini",
+            "nest_index": 1, "backend": "xla", "search": False,
+            "iterations": 1, "population": 2, "repeats": 1,
+            "fingerprint": fingerprint(p.body[1])}
+    r = T._tune_nest(task)
+    assert r["fingerprint"] == fingerprint(p.body[1])
+    assert r["measured_us"] is not None and r["recipe"]["kind"]
+
+
+def test_default_pretuned_path_env_override(tmp_path, monkeypatch):
+    from repro.core.database import default_pretuned_path
+
+    monkeypatch.setenv("REPRO_PRETUNED_DIR", str(tmp_path))
+    with pytest.raises(FileNotFoundError, match="repro.tools.tune"):
+        default_pretuned_path("xla")
+    (tmp_path / "pretuned_xla.json").write_text("{}")
+    assert default_pretuned_path("xla") == tmp_path / "pretuned_xla.json"
+
+
+def test_shipped_pretuned_database_covers_polybench():
+    """The repo ships data/pretuned_xla.json (bench-size A variants +
+    CLOUDSC); every canonical nest of a strided B variant must hit it."""
+    from repro.core.database import try_load_pretuned
+
+    db = try_load_pretuned("xla")
+    assert db is not None, "shipped data/pretuned_xla.json missing"
+    assert len(db.entries) >= 40
+    assert all(e.measured_us is not None for e in db.entries)
+    p = Daisy(backend="xla")._normalized(BENCHMARKS["syrk"].make("b", "bench"))
+    assert all(db.lookup_exact(fingerprint(n)) is not None for n in p.body)
+
+
+@pytest.mark.slow
+def test_tune_process_pool_matches_inline(tmp_path):
+    """jobs>1 (spawn pool) lands the same fingerprints as the inline path."""
+    inline, _ = T.tune(suite="polybench", size="mini", backend="xla",
+                       out=tmp_path / "inline.json", names=["gemm"], jobs=0,
+                       search=False, repeats=1, verbose=False)
+    pooled, _ = T.tune(suite="polybench", size="mini", backend="xla",
+                       out=tmp_path / "pooled.json", names=["gemm"], jobs=2,
+                       search=False, repeats=1, verbose=False)
+    assert ({e.fingerprint for e in inline.entries}
+            == {e.fingerprint for e in pooled.entries})
+
+
+@pytest.mark.slow
+def test_bench_run_rejects_unknown_only():
+    """benchmarks/run.py must list valid suites instead of a bare KeyError."""
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "nope"],
+        capture_output=True, text=True, cwd=REPO,
+        env={**os.environ, "PYTHONPATH": "src"},
+    )
+    assert r.returncode == 2
+    assert "unknown suite(s): nope" in r.stderr
+    assert "transfer" in r.stderr and "fig1" in r.stderr
