@@ -1,0 +1,178 @@
+"""Perf-trend comparator: gate every ``bench_*.json`` metric against a
+baseline from the previous main-branch run.
+
+The CI ``perf-trend`` job restores the last main-branch bench JSONs from the
+actions cache, runs this module against the freshly produced ones, and fails
+the build on any metric regressing by more than ``--threshold`` (25% by
+default).  Metric direction is inferred from the key:
+
+  * ``*_us`` / ``*us_per_call`` leaves — wall times, **lower** is better;
+  * leaves whose name contains ``speedup`` — ratios, **higher** is better;
+  * booleans/counters/shape metadata — ignored (they gate elsewhere).
+
+``--history-out`` appends the current metrics to a rolling
+``BENCH_history.json`` (one entry per run, newest last) so the bench
+trajectory is downloadable as a single artifact instead of a pile of
+per-run files.  Pure stdlib on purpose: the comparator must keep working on
+a runner where jax is broken — that is exactly the day it matters.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Any, Iterable
+
+DEFAULT_THRESHOLD = 0.25
+HISTORY_KEEP = 200
+
+
+def flatten_metrics(obj: Any, prefix: str = "") -> dict[str, float]:
+    """Numeric leaves of a bench JSON as dotted paths (bools excluded)."""
+    out: dict[str, float] = {}
+    if isinstance(obj, dict):
+        for k, v in sorted(obj.items()):
+            out.update(flatten_metrics(v, f"{prefix}.{k}" if prefix else str(k)))
+    elif isinstance(obj, bool):
+        pass
+    elif isinstance(obj, (int, float)):
+        out[prefix] = float(obj)
+    return out
+
+
+def metric_direction(key: str) -> str | None:
+    """'lower' / 'higher' is better, or None for ungated metadata."""
+    leaf = key.rsplit(".", 1)[-1]
+    if leaf.endswith("_us") or leaf.endswith("us_per_call") or leaf == "us":
+        return "lower"
+    if "speedup" in leaf:
+        return "higher"
+    return None
+
+
+def collect_dir(path: str) -> dict[str, float]:
+    """All metrics of every ``bench_*.json`` under ``path``, keyed
+    ``<file-stem>:<dotted.path>``."""
+    out: dict[str, float] = {}
+    for f in sorted(glob.glob(os.path.join(path, "bench_*.json"))):
+        stem = os.path.splitext(os.path.basename(f))[0]
+        try:
+            with open(f) as fh:
+                data = json.load(fh)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"compare: skipping unreadable {f}: {e}", file=sys.stderr)
+            continue
+        for k, v in flatten_metrics(data).items():
+            out[f"{stem}:{k}"] = v
+    return out
+
+
+def load_baseline(path: str) -> dict[str, float]:
+    """Baseline metrics from a directory of bench JSONs or a history file
+    (the newest entry).  Missing baseline -> empty (first run passes)."""
+    if os.path.isdir(path):
+        return collect_dir(path)
+    if os.path.isfile(path):
+        with open(path) as fh:
+            hist = json.load(fh)
+        if isinstance(hist, list) and hist:
+            return {k: float(v) for k, v in hist[-1].get("metrics", {}).items()}
+    return {}
+
+
+def compare(
+    baseline: dict[str, float],
+    current: dict[str, float],
+    threshold: float = DEFAULT_THRESHOLD,
+) -> list[dict[str, Any]]:
+    """Regressions of ``current`` vs ``baseline`` beyond ``threshold``.
+
+    Only keys present in both sides gate (new benchmarks get a free first
+    run; retired ones stop gating); each finding records the ratio by which
+    the metric moved in the bad direction.
+    """
+    bad: list[dict[str, Any]] = []
+    for key in sorted(set(baseline) & set(current)):
+        direction = metric_direction(key)
+        if direction is None:
+            continue
+        base, cur = baseline[key], current[key]
+        if base <= 0 or cur <= 0:
+            continue
+        ratio = cur / base if direction == "lower" else base / cur
+        if ratio > 1.0 + threshold:
+            bad.append({"metric": key, "baseline": base, "current": cur,
+                        "direction": direction, "ratio": ratio})
+    return bad
+
+
+def merge_history(
+    history_path: str,
+    metrics: dict[str, float],
+    run_id: str,
+    keep: int = HISTORY_KEEP,
+) -> list[dict[str, Any]]:
+    hist: list[dict[str, Any]] = []
+    if os.path.isfile(history_path):
+        try:
+            with open(history_path) as fh:
+                loaded = json.load(fh)
+            if isinstance(loaded, list):
+                hist = loaded
+        except (OSError, json.JSONDecodeError):
+            hist = []
+    hist.append({"run": run_id, "metrics": metrics})
+    hist = hist[-keep:]
+    with open(history_path, "w") as fh:
+        json.dump(hist, fh, indent=1)
+    return hist
+
+
+def main(argv: Iterable[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True,
+                    help="dir of previous bench_*.json, or a BENCH_history.json")
+    ap.add_argument("--current", required=True,
+                    help="dir holding this run's bench_*.json files")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="relative regression that fails the gate (0.25 = 25%%)")
+    ap.add_argument("--history-out", default=None,
+                    help="append current metrics to this rolling history JSON")
+    ap.add_argument("--run-id", default="local",
+                    help="label for the history entry (commit sha)")
+    args = ap.parse_args(list(argv) if argv is not None else None)
+
+    current = collect_dir(args.current)
+    if not current:
+        print(f"compare: no bench_*.json under {args.current}", file=sys.stderr)
+        return 2
+    baseline = load_baseline(args.baseline)
+    if args.history_out:
+        merge_history(args.history_out, current, args.run_id)
+        print(f"history: appended {len(current)} metrics as run '{args.run_id}' "
+              f"-> {args.history_out}")
+    if not baseline:
+        print("compare: no baseline found — first run, all "
+              f"{len(current)} metrics recorded, gate passes")
+        return 0
+
+    gated = sum(1 for k in set(baseline) & set(current) if metric_direction(k))
+    regressions = compare(baseline, current, args.threshold)
+    print(f"compare: {gated} gated metrics vs baseline "
+          f"({len(current)} current, threshold {args.threshold:.0%})")
+    for r in regressions:
+        print(f"  REGRESSION {r['metric']}: {r['baseline']:.1f} -> "
+              f"{r['current']:.1f} ({r['ratio']:.2f}x worse, "
+              f"{r['direction']} is better)")
+    if regressions:
+        print(f"compare: {len(regressions)} regression(s) beyond "
+              f"{args.threshold:.0%}", file=sys.stderr)
+        return 1
+    print("compare: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

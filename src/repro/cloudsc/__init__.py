@@ -1,2 +1,2 @@
 from .erosion import erosion_program  # noqa: F401
-from .scheme import mini_cloudsc_program  # noqa: F401
+from .scheme import column_mesh, compile_scheme, mini_cloudsc_program  # noqa: F401

@@ -118,6 +118,47 @@ def mini_cloudsc_program(nproma: int = 128, klev: int = 137) -> Program:
     )
 
 
+def column_mesh(n_devices: int | None = None, axis: str = "data"):
+    """A 1-D mesh over the horizontal-column axis — the paper's NPROMA
+    posture: CLOUDSC is embarrassingly parallel over grid columns (JL), so
+    the whole scheme data-parallelizes across ``axis`` with zero collectives
+    (the JK recurrence stays inside each shard's ``lax.scan``)."""
+    import jax
+
+    from ..launch.mesh import make_mesh
+
+    n = n_devices if n_devices is not None else len(jax.devices())
+    return make_mesh((n,), (axis,))
+
+
+def compile_scheme(
+    nproma: int = 128,
+    klev: int = 137,
+    mesh=None,
+    schedule=None,
+    fuse: bool = True,
+):
+    """Normalize + compile the mini scheme, column-sharded when ``mesh`` is
+    given.  Returns ``(jitted_fn, ProgramPartition | None)``; the partition
+    planner discovers the JL column iterator of every canonical nest and
+    shards it over the mesh's ``data`` axis (all (klev, nproma) fields split
+    along columns, scalar-expanded temporaries along their JL extent)."""
+    import jax
+
+    from ..core.codegen import Schedule, compile_jax
+    from ..core.fusion import optimization_pipeline
+    from ..core.partition import compile_sharded
+
+    prog = mini_cloudsc_program(nproma, klev)
+    norm = optimization_pipeline(fuse=fuse).run(prog)
+    sched = schedule if schedule is not None else Schedule(
+        mode="canonical", use_idioms=False, scan=True, shard_axis="data")
+    if mesh is None:
+        return jax.jit(compile_jax(norm, sched)), None
+    fn, partition = compile_sharded(norm, sched, mesh=mesh, axis="data")
+    return jax.jit(fn), partition
+
+
 def scheme_inputs(nproma: int = 128, klev: int = 137, seed: int = 0) -> dict[str, np.ndarray]:
     rng = np.random.default_rng(seed)
     return {

@@ -6,6 +6,7 @@ Public API:
     normalize   — maximal loop fission + stride minimization (paper §2)
     fusion      — canonical-form re-fusion of adjacent elementwise nests
     codegen     — executable lowerings (numpy oracle, as-written, canonical)
+    partition   — mesh data-parallel sharding of canonical programs
     scheduler   — Daisy: pipeline -> idioms -> transfer-tune -> compile
 """
 from .ir import (  # noqa: F401
@@ -36,6 +37,13 @@ from .normalize import (  # noqa: F401
 )
 from .fusion import FusionPass, fuse_program, optimization_pipeline  # noqa: F401
 from .codegen import Schedule, compile_jax, execute_numpy, run_jax  # noqa: F401
+from .partition import (  # noqa: F401
+    NestPartition,
+    ProgramPartition,
+    compile_sharded,
+    plan_program_partition,
+    run_sharded,
+)
 from .tiling import TilePlan, TilingError, plan_nest_tiling  # noqa: F401
 from .cache import CacheStats, CompilationCache, fingerprint_obj  # noqa: F401
 from .database import TuningDatabase  # noqa: F401

@@ -132,6 +132,12 @@ class Schedule:
     carried (recurrence) loops with a ``lax.scan`` that slices leading-axis
     operands into per-step rows and stacks the written rows (canonical mode
     only; 'as_written' keeps the baseline-compiler fori behavior).
+
+    ``shard_axis`` opts the nest into the mesh partitioner
+    (``repro.core.partition``): when ``compile_sharded`` runs over a mesh
+    axis of that name, the planner may shard the nest's outermost parallel
+    iterator across it (None keeps the nest single-device/replicated).  The
+    flag is inert under plain ``compile_jax``.
     """
 
     mode: str = "canonical"  # 'as_written' | 'canonical'
@@ -146,6 +152,7 @@ class Schedule:
     unroll: int = 1  # in-kernel reduction unroll factor
     scan: bool = True  # lax.scan recurrences (canonical mode)
     vmem_budget: int = 1 << 23  # tiling planner working-set budget (bytes)
+    shard_axis: str | None = None  # mesh axis for the partition planner
 
 
 # Trace-time lowering counters (tests assert which path actually fired).

@@ -38,7 +38,10 @@ class Recipe:
     kind: str = "vectorize"
     vec_budget: int = 1 << 22          # materialization budget (elements)
     tile: tuple[int, ...] | None = None  # Pallas block sizes (see docstring)
-    parallelize: str | None = None     # mesh axis for the outer parallel loop
+    # mesh axis for the outer parallel loop: an axis name pins the nest to
+    # that axis, 'none' disables sharding, None defers to the scheduler's
+    # default (Daisy.shard_axis under a mesh)
+    parallelize: str | None = None
     unroll: int = 1                    # reduction unroll factor
     notes: str = ""
 

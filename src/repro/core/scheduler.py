@@ -21,7 +21,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field, replace
 from pathlib import Path
-from typing import Callable, Mapping, Sequence
+from typing import Any, Callable, Mapping, Sequence
 
 import jax
 import numpy as np
@@ -65,6 +65,9 @@ class NestPlan:
 class ProgramPlan:
     program: Program  # normalized
     nests: list[NestPlan]
+    # filled by ``Daisy.compile`` under a mesh: the partition planner's
+    # whole-program sharding decision (None before compilation / no mesh)
+    partition: "Any | None" = None
 
     @property
     def normalized(self) -> bool:
@@ -130,6 +133,8 @@ class Daisy:
         cache: CompilationCache | None = None,
         fuse: bool = True,
         backend: str | None = None,
+        mesh: Any = None,
+        shard_axis: str = "data",
     ):
         """``backend`` selects how Pallas-kind recipes are executed:
 
@@ -142,6 +147,13 @@ class Daisy:
 
         ``interpret`` is kept for backward compatibility; passing ``backend``
         overrides it.
+
+        ``mesh`` turns on the sharded execution path: ``compile`` routes the
+        normalized program through the partition planner
+        (``repro.core.partition``), which shards each canonical nest's
+        outermost parallel iterator across ``mesh``'s ``shard_axis`` and
+        falls back to replication wherever the dependence oracle vetoes.  A
+        recipe's ``parallelize`` knob overrides the default axis per nest.
         """
         if backend is not None:
             if backend not in ("xla", "pallas_interpret", "pallas"):
@@ -151,6 +163,8 @@ class Daisy:
         self.db = db if db is not None else TuningDatabase()
         self.interpret = interpret
         self.fuse = fuse
+        self.mesh = mesh
+        self.shard_axis = shard_axis
         # The compiler pass pipeline: a priori normalization + canonical-form
         # re-fusion.  Shared by plan/compile/seed so database fingerprints
         # always refer to the same canonical form.
@@ -187,8 +201,15 @@ class Daisy:
         # Daisy objects sharing one CompilationCache but holding different
         # databases never exchange plans; generation expires plans resolved
         # against older contents of the *same* database.
+        # the mesh enters by value (axis names + sizes + device ids), not
+        # identity: two equal meshes over the same devices address the same
+        # compiled fn, while equal-shaped meshes over *different* devices —
+        # whose shard_maps place outputs differently — stay distinct
+        mesh_sig = (tuple(sorted(self.mesh.shape.items())),
+                    tuple(d.id for d in self.mesh.devices.flat),
+                    self.shard_axis) if self.mesh is not None else None
         return (fp, normalize_first, self.fuse, self.interpret, self.backend,
-                self.db.uid, self.db.generation)
+                mesh_sig, self.db.uid, self.db.generation)
 
     def _backend_recipe(self, recipe: Recipe) -> Recipe:
         """Map a recipe onto the selected backend: under 'xla' the Pallas
@@ -234,10 +255,18 @@ class Daisy:
             return cached
         plan = self.plan(program, normalize_first=normalize_first, _fp=fp)
         per_nest = [
-            schedule_from_recipe(self._backend_recipe(np_.recipe), self.interpret)
+            schedule_from_recipe(
+                self._backend_recipe(np_.recipe), self.interpret,
+                shard_axis=self.shard_axis if self.mesh is not None else None)
             for np_ in plan.nests
         ]
-        fn = compile_jax(plan.program, per_nest)
+        if self.mesh is not None:
+            from .partition import compile_sharded
+
+            fn, plan.partition = compile_sharded(
+                plan.program, per_nest, mesh=self.mesh, axis=self.shard_axis)
+        else:
+            fn = compile_jax(plan.program, per_nest)
         result = ((jax.jit(fn) if jit else fn), plan)
         self.cache.put(key, result)
         return result

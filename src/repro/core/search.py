@@ -39,26 +39,37 @@ def default_recipe_for(idiom: IdiomMatch) -> Recipe:
     return Recipe(kind="vectorize", notes=f"idiom:{idiom.kind}")
 
 
-def schedule_from_recipe(recipe: Recipe, interpret: bool = True) -> Schedule:
+def schedule_from_recipe(
+    recipe: Recipe, interpret: bool = True, shard_axis: str | None = None
+) -> Schedule:
+    """Recipe -> Schedule.  ``shard_axis`` is the scheduler-level default
+    mesh axis (``Daisy.shard_axis`` under a mesh); the recipe's own
+    ``parallelize`` knob — the one the evolutionary search may flip — wins
+    when set: an axis name pins the nest to that axis, the ``'none'``
+    sentinel disables sharding for the nest (None defers to the default)."""
+    axis = recipe.parallelize or shard_axis
+    if axis == "none":
+        axis = None
     if recipe.kind == "einsum":
         return Schedule(mode="canonical", use_idioms=True, vec_budget=recipe.vec_budget,
-                        pallas_gemm=False, interpret=interpret)
+                        pallas_gemm=False, interpret=interpret, shard_axis=axis)
     if recipe.kind == "pallas_gemm":
         return Schedule(mode="canonical", use_idioms=True, vec_budget=recipe.vec_budget,
-                        pallas_gemm=True, tile=recipe.tile, interpret=interpret)
+                        pallas_gemm=True, tile=recipe.tile, interpret=interpret,
+                        shard_axis=axis)
     if recipe.kind == "pallas_nest":
         return Schedule(mode="canonical", use_idioms=False, vec_budget=recipe.vec_budget,
                         pallas_nest=True, nest_tile=recipe.tile,
-                        unroll=recipe.unroll, interpret=interpret)
+                        unroll=recipe.unroll, interpret=interpret, shard_axis=axis)
     if recipe.kind == "pallas_reduce":
         return Schedule(mode="canonical", use_idioms=False, vec_budget=recipe.vec_budget,
                         pallas_reduce=True, nest_tile=recipe.tile,
-                        unroll=recipe.unroll, interpret=interpret)
+                        unroll=recipe.unroll, interpret=interpret, shard_axis=axis)
     if recipe.kind == "sequential":
         return Schedule(mode="as_written", use_idioms=False, vec_budget=recipe.vec_budget,
-                        interpret=interpret)
+                        interpret=interpret, shard_axis=axis)
     return Schedule(mode="canonical", use_idioms=False, vec_budget=recipe.vec_budget,
-                    interpret=interpret)
+                    interpret=interpret, shard_axis=axis)
 
 
 def _mutate(recipe: Recipe, rng: random.Random) -> Recipe:
@@ -91,8 +102,16 @@ def _mutate(recipe: Recipe, rng: random.Random) -> Recipe:
                    "pallas_reduce": REDUCE_TILE_PRESETS,
                    "pallas_gemm": GEMM_TILE_PRESETS}[r.kind]
         r = replace(r, tile=rng.choice(presets))
-    else:
+    elif roll < 0.95:
         r = replace(r, unroll=rng.choice([1, 2, 4]))
+    else:
+        # cycle the mesh-axis knob (None = scheduler default, 'none' =
+        # sharding off for this nest, 'data' = pin): under a mesh,
+        # ``Daisy.compile`` routes the nest through the partition planner
+        # accordingly; single-device measurement is unaffected, so the knob
+        # rides along neutrally until a mesh deployment reads it.
+        cycle = {None: "data", "data": "none", "none": None}
+        r = replace(r, parallelize=cycle.get(r.parallelize))
     return r
 
 

@@ -1,11 +1,41 @@
-"""jax version compatibility shims for the Pallas TPU kernels.
+"""jax version compatibility shims for the Pallas TPU kernels and meshes.
 
 ``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in newer
 jax releases; the kernels are written against the current name and this shim
 resolves whichever the installed jax provides.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+(and its replication-check keyword was renamed ``check_rep`` ->
+``check_vma``); ``shard_map_compat`` resolves the callable once and hides the
+keyword drift so the partition planner builds the same wrapper on every
+supported jax.
 """
 from __future__ import annotations
 
+from typing import Any
+
+import jax
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs) -> Any:
+    """``shard_map`` across jax versions, replication checks disabled.
+
+    The partition planner emits replicated out-specs for arrays that every
+    shard computes redundantly (and for all-reduced accumulators); the
+    static replication checker cannot always prove those, and its keyword
+    was renamed between releases — so the checks are uniformly off and the
+    planner's own veto analysis is the soundness argument.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        for kw in ({"check_vma": False}, {"check_rep": False}, {}):
+            try:
+                return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+            except TypeError:
+                continue
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)

@@ -30,7 +30,11 @@ Pytree = Any
 
 
 def _msize(mesh) -> int:
-    return mesh.shape["model"]
+    # a mesh without a model axis (e.g. the pure-DP column mesh of the
+    # sharded canonical-program path) has TP size 0: every divisibility
+    # check fails and all rules fall back to replication instead of
+    # emitting specs that name a nonexistent axis
+    return mesh.shape.get("model", 0)
 
 
 def _dpsize(mesh) -> int:
@@ -61,7 +65,7 @@ def _param_rule(path: str, shape: tuple[int, ...], mesh, cfg=None) -> P:
     # (B, S, heads, dh) reshape sharded (XLA "involuntary full remat" —
     # replicates the tensor).  Shard the *contracting* dim instead
     # (row-parallel: psum'd, output replicated over model).
-    if cfg is not None and leaf in ("wq", "wk", "wv") and nd >= 2:
+    if cfg is not None and leaf in ("wq", "wk", "wv") and nd >= 2 and m > 0:
         heads = cfg.n_heads if leaf == "wq" else cfg.n_kv_heads
         if heads % m != 0:
             return pad(["model" if _div(shape[-2], m) else None, None])

@@ -49,10 +49,22 @@ class ServingEngine:
     mesh (batch -> data axis, heads/experts -> model axis)."""
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
-                 tuning_db: TuningDatabase | None = None):
+                 tuning_db: TuningDatabase | None = None, mesh=None):
+        """``mesh`` (any mesh with a ``model`` axis, e.g. from
+        ``launch.mesh.make_mesh``) places the parameters with the sharding
+        planner's specs (``launch.sharding.param_specs``) before the first
+        jit — the decode step then partitions across the mesh via the
+        committed shardings instead of running single-device."""
         from ..models.lowering import deployment_database
 
         self.cfg, self.params, self.scfg = cfg, params, scfg
+        self.mesh = mesh
+        if mesh is not None:
+            from ..launch.sharding import param_specs
+
+            shapes = jax.eval_shape(lambda p: p, params)
+            self.params = jax.device_put(
+                params, param_specs(shapes, mesh, cfg=cfg))
         # Deployments start warm: recipe resolution for this engine's
         # contractions runs against the shipped pretuned transfer database
         # (plus the canonical-GEMM model seed) unless the caller stages its

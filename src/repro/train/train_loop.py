@@ -129,10 +129,16 @@ class Trainer:
         tcfg: TrainerConfig,
         seed: int = 0,
         tuning_db: TuningDatabase | None = None,
+        mesh=None,
     ):
+        """``mesh`` places parameters (and hence the AdamW moments derived
+        from them) with ``launch.sharding.param_specs`` before the step jit
+        is built — gradients then reduce across the mesh's data axes via the
+        committed shardings (pjit), no step-function changes needed."""
         from ..models.lowering import deployment_database
 
         self.cfg, self.opt_cfg, self.tcfg = cfg, opt_cfg, tcfg
+        self.mesh = mesh
         # Deployments start warm: kernel planning resolves against the
         # shipped pretuned transfer database unless the caller stages its own.
         self.tuning_db = tuning_db if tuning_db is not None else deployment_database()
@@ -142,6 +148,16 @@ class Trainer:
         self.hb = Heartbeat(tcfg.heartbeat) if tcfg.heartbeat else None
         self.params = M.init_params(cfg, jax.random.PRNGKey(seed))
         self.opt_state = adamw_init(self.params)
+        if mesh is not None:
+            from ..launch.sharding import param_specs
+
+            shapes = jax.eval_shape(lambda p: p, self.params)
+            specs = param_specs(shapes, mesh, cfg=cfg)
+            self.params = jax.device_put(self.params, specs)
+            # the AdamW moments are parameter-shaped: place them with the
+            # same specs so optimizer state scales with the mesh too
+            self.opt_state["m"] = jax.device_put(self.opt_state["m"], specs)
+            self.opt_state["v"] = jax.device_put(self.opt_state["v"], specs)
         # Keyed by config content: a Trainer re-created with equal configs
         # (checkpoint-resume, fault-tolerant restarts) reuses the jitted
         # step and its traces instead of rebuilding and recompiling.

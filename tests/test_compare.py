@@ -1,0 +1,126 @@
+"""benchmarks/compare.py: the perf-trend gate (pure stdlib, no jax)."""
+import json
+
+import pytest
+
+from benchmarks import compare as C
+
+
+def write(path, data):
+    path.write_text(json.dumps(data))
+
+
+@pytest.fixture
+def dirs(tmp_path):
+    base = tmp_path / "baseline"
+    cur = tmp_path / "current"
+    base.mkdir()
+    cur.mkdir()
+    return base, cur
+
+
+BENCH = {
+    "recurrence": {"fori_us": 1000.0, "scan_us": 100.0, "speedup": 10.0,
+                   "speedup_ok": True},
+    "chain": {"chain_vectorize_full": 50.0},
+    "meta": {"devices": 8},
+}
+
+
+class TestMetrics:
+    def test_flatten_skips_bools(self):
+        flat = C.flatten_metrics(BENCH)
+        assert flat["recurrence.scan_us"] == 100.0
+        assert "recurrence.speedup_ok" not in flat
+        assert flat["meta.devices"] == 8.0
+
+    def test_direction(self):
+        assert C.metric_direction("x:recurrence.scan_us") == "lower"
+        assert C.metric_direction("x:a.us_per_call") == "lower"
+        assert C.metric_direction("x:recurrence.speedup") == "higher"
+        assert C.metric_direction("x:meta.devices") is None
+
+    def test_collect_dir_keys_by_stem(self, dirs):
+        base, _ = dirs
+        write(base / "bench_tiling.json", BENCH)
+        got = C.collect_dir(str(base))
+        assert got["bench_tiling:recurrence.scan_us"] == 100.0
+
+
+class TestCompare:
+    def test_no_regression_passes(self):
+        cur = {"b:t_us": 110.0, "b:speedup": 9.0}
+        base = {"b:t_us": 100.0, "b:speedup": 10.0}
+        assert C.compare(base, cur, threshold=0.25) == []
+
+    def test_time_regression_detected(self):
+        bad = C.compare({"b:t_us": 100.0}, {"b:t_us": 130.0}, threshold=0.25)
+        assert len(bad) == 1 and bad[0]["metric"] == "b:t_us"
+
+    def test_speedup_regression_detected(self):
+        bad = C.compare({"b:speedup": 10.0}, {"b:speedup": 7.0}, threshold=0.25)
+        assert len(bad) == 1 and bad[0]["direction"] == "higher"
+
+    def test_new_and_retired_metrics_do_not_gate(self):
+        assert C.compare({"old:t_us": 1.0}, {"new:t_us": 99.0}) == []
+
+    def test_ungated_metadata_ignored(self):
+        assert C.compare({"b:devices": 8.0}, {"b:devices": 1.0}) == []
+
+
+class TestMain:
+    def test_injected_regression_exits_nonzero(self, dirs):
+        base, cur = dirs
+        write(base / "bench_tiling.json", BENCH)
+        slow = json.loads(json.dumps(BENCH))
+        slow["recurrence"]["scan_us"] = 100.0 * 1.3  # >25% slower
+        write(cur / "bench_tiling.json", slow)
+        rc = C.main(["--baseline", str(base), "--current", str(cur)])
+        assert rc == 1
+
+    def test_within_threshold_passes(self, dirs):
+        base, cur = dirs
+        write(base / "bench_tiling.json", BENCH)
+        ok = json.loads(json.dumps(BENCH))
+        ok["recurrence"]["scan_us"] = 100.0 * 1.2  # under 25%
+        write(cur / "bench_tiling.json", ok)
+        assert C.main(["--baseline", str(base), "--current", str(cur)]) == 0
+
+    def test_missing_baseline_is_first_run(self, dirs):
+        base, cur = dirs
+        write(cur / "bench_x.json", BENCH)
+        assert C.main(["--baseline", str(base), "--current", str(cur)]) == 0
+
+    def test_empty_current_is_an_error(self, dirs):
+        base, cur = dirs
+        assert C.main(["--baseline", str(base), "--current", str(cur)]) == 2
+
+    def test_history_merges_and_rolls(self, dirs, tmp_path):
+        base, cur = dirs
+        write(cur / "bench_x.json", BENCH)
+        hist = tmp_path / "BENCH_history.json"
+        for sha in ("aaa", "bbb"):
+            rc = C.main(["--baseline", str(base), "--current", str(cur),
+                         "--history-out", str(hist), "--run-id", sha])
+            assert rc == 0
+        entries = json.loads(hist.read_text())
+        assert [e["run"] for e in entries] == ["aaa", "bbb"]
+        assert entries[-1]["metrics"]["bench_x:recurrence.scan_us"] == 100.0
+
+    def test_history_as_baseline(self, dirs, tmp_path):
+        base, cur = dirs
+        write(cur / "bench_x.json", BENCH)
+        hist = tmp_path / "BENCH_history.json"
+        C.main(["--baseline", str(base), "--current", str(cur),
+                "--history-out", str(hist), "--run-id", "aaa"])
+        slow = json.loads(json.dumps(BENCH))
+        slow["recurrence"]["scan_us"] = 200.0
+        write(cur / "bench_x.json", slow)
+        rc = C.main(["--baseline", str(hist), "--current", str(cur)])
+        assert rc == 1
+
+    def test_corrupt_baseline_file_skipped(self, dirs):
+        base, cur = dirs
+        (base / "bench_bad.json").write_text("{not json")
+        write(cur / "bench_bad.json", BENCH)
+        assert C.main(["--baseline", str(base), "--current", str(cur)]) == 0
