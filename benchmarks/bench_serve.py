@@ -1,0 +1,239 @@
+"""Serving-path benchmark (PR-6 tentpole): continuous batching vs the
+per-request decode loop, plus p50/p99 request latency under a seeded
+open-loop traffic generator.
+
+Two measurements:
+
+  * **throughput gate** — the same request set decoded by (a) the
+    pre-continuous-batching engine loop (one batch-1 jitted decode per
+    active request per token, host sync on every sampled token) and (b) the
+    continuous-batching engine (one batched decode over all slots, greedy
+    sample fused on device, pipelined dispatch).  Greedy outputs must match
+    token-for-token; the CLI exits non-zero when the batched engine is below
+    2x tokens/sec at >= 4 concurrent requests.
+  * **latency** — an open-loop traffic trace (Poisson arrivals whose times
+    do NOT depend on service times, mixed prompt lengths, fixed seed) is
+    replayed against the engine in real time; per-request latency is
+    completion minus arrival.  Reports p50/p99 latency and sustained
+    tokens/sec — the numbers the perf-trend CI job gates run-over-run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve import ServeConfig, ServingEngine
+
+from .common import emit
+
+
+# ---------------------------------------------------------------------------
+# percentile + traffic generator (pure, seeded — unit-tested)
+# ---------------------------------------------------------------------------
+def percentile(values, q: float) -> float:
+    """Linear-interpolation percentile (numpy's default method), q in
+    [0, 100].  Implemented locally so the latency math is unit-testable
+    without depending on numpy method-name churn."""
+    vs = sorted(float(v) for v in values)
+    if not vs:
+        raise ValueError("percentile of empty sequence")
+    if len(vs) == 1:
+        return vs[0]
+    pos = (len(vs) - 1) * q / 100.0
+    lo = int(pos)
+    hi = min(lo + 1, len(vs) - 1)
+    frac = pos - lo
+    return vs[lo] * (1.0 - frac) + vs[hi] * frac
+
+
+def make_traffic(n: int, rate_per_s: float, prompt_lens, vocab: int,
+                 seed: int = 0) -> list[tuple[float, np.ndarray]]:
+    """A seeded open-loop request trace: ``n`` requests with Poisson
+    arrivals (exponential inter-arrival times at ``rate_per_s``) and prompt
+    lengths drawn uniformly from ``prompt_lens``.  Open loop means arrival
+    times are fixed by the trace, never by how fast the server drains —
+    latency under overload shows up as queueing delay instead of being
+    hidden by back-pressure.  Same seed -> identical trace."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    trace: list[tuple[float, np.ndarray]] = []
+    for _ in range(n):
+        t += float(rng.exponential(1.0 / rate_per_s))
+        ln = int(rng.choice(np.asarray(prompt_lens)))
+        trace.append((t, rng.integers(1, vocab, size=ln).astype(np.int32)))
+    return trace
+
+
+# ---------------------------------------------------------------------------
+# the pre-PR-6 engine loop, kept as the measured baseline
+# ---------------------------------------------------------------------------
+def per_request_baseline(cfg, params, scfg: ServeConfig,
+                         prompts: list[np.ndarray]) -> dict[int, list[int]]:
+    """The old ``ServingEngine.run()``: per-request batch-1 decode with a
+    host sync on every sampled token (the loop PR 6 replaced)."""
+    decode = jax.jit(partial(M.decode_step, cfg))
+    queue = list(enumerate(prompts))
+    active: dict[int, list] = {}
+    results: dict[int, list[int]] = {}
+    while queue or active:
+        while queue and len(active) < scfg.batch_slots:
+            rid, prompt = queue.pop(0)
+            state = M.init_decode_state(cfg, 1, scfg.max_len, ring=False)
+            logits, state = decode(params, state, jnp.asarray(prompt[None, :]))
+            active[rid] = [state, logits[:, -1], []]
+        for rid in list(active):
+            st, last, out = active[rid]
+            tok = int(np.asarray(last, np.float32)[0].argmax())
+            out.append(tok)
+            if len(out) >= scfg.max_new_tokens or tok == scfg.eos_id:
+                results[rid] = out
+                del active[rid]
+                continue
+            logits, st = decode(params, st, jnp.full((1, 1), tok, jnp.int32))
+            active[rid] = [st, logits[:, -1], out]
+    return results
+
+
+def engine_drain(cfg, params, scfg: ServeConfig,
+                 prompts: list[np.ndarray]) -> dict[int, list[int]]:
+    eng = ServingEngine(cfg, params, scfg)
+    for i, p in enumerate(prompts):
+        eng.submit(p, rid=i)
+    return eng.drain()
+
+
+# ---------------------------------------------------------------------------
+# measurements
+# ---------------------------------------------------------------------------
+def bench_throughput(cfg, params, scfg: ServeConfig,
+                     prompts: list[np.ndarray], repeats: int) -> dict:
+    # correctness first: continuous batching must be bit-identical greedy
+    base_out = per_request_baseline(cfg, params, scfg, prompts)
+    batch_out = engine_drain(cfg, params, scfg, prompts)
+    match = base_out == batch_out
+    assert match, "continuous-batching output diverged from the per-request loop"
+
+    n_tokens = sum(len(v) for v in base_out.values())
+
+    def timed(fn) -> float:
+        runs = []
+        for _ in range(max(1, repeats)):
+            t0 = time.perf_counter()
+            fn()
+            runs.append(time.perf_counter() - t0)
+        return float(np.median(runs))
+
+    base_s = timed(lambda: per_request_baseline(cfg, params, scfg, prompts))
+    batch_s = timed(lambda: engine_drain(cfg, params, scfg, prompts))
+    base_tps = n_tokens / base_s
+    batch_tps = n_tokens / batch_s
+    speedup = batch_tps / base_tps
+    emit("serve_per_request", base_s * 1e6, f"{base_tps:.0f} tok/s")
+    emit("serve_batched", batch_s * 1e6,
+         f"{batch_tps:.0f} tok/s speedup={speedup:.2f}x")
+    return {
+        "n_requests": len(prompts), "n_tokens": n_tokens,
+        "per_request_us": base_s * 1e6, "batched_us": batch_s * 1e6,
+        "baseline_tokens_per_sec": base_tps,
+        "tokens_per_sec": batch_tps,
+        "speedup": speedup, "outputs_match": bool(match),
+        "speedup_ok": bool(speedup >= 2.0),
+    }
+
+
+def bench_latency(cfg, params, scfg: ServeConfig,
+                  trace: list[tuple[float, np.ndarray]]) -> dict:
+    """Replay the open-loop trace in real time; latency per request is
+    harvest-of-final-token minus scheduled arrival."""
+    eng = ServingEngine(cfg, params, scfg)
+    pending: list[tuple[float, object]] = []
+    lat_s: list[float] = []
+    total_tokens = 0
+    i = 0
+    t0 = time.perf_counter()
+    while i < len(trace) or pending:
+        now = time.perf_counter() - t0
+        while i < len(trace) and trace[i][0] <= now:
+            at, prompt = trace[i]
+            pending.append((at, eng.submit(prompt)))
+            i += 1
+        if not pending:
+            # open loop: idle until the next scheduled arrival
+            time.sleep(min(max(trace[i][0] - now, 0.0), 0.001))
+            continue
+        eng.step()
+        now = time.perf_counter() - t0
+        still = []
+        for at, h in pending:
+            if h.done:
+                lat_s.append(now - at)
+                total_tokens += len(h.tokens)
+            else:
+                still.append((at, h))
+        pending = still
+    elapsed = time.perf_counter() - t0
+    p50, p99 = percentile(lat_s, 50) * 1e6, percentile(lat_s, 99) * 1e6
+    tps = total_tokens / elapsed
+    emit("serve_latency_p50", p50, f"{tps:.0f} tok/s sustained")
+    emit("serve_latency_p99", p99)
+    return {
+        "n_requests": len(trace), "total_tokens": total_tokens,
+        "p50_us": p50, "p99_us": p99,
+        "tokens_per_sec": tps, "elapsed_us": elapsed * 1e6,
+    }
+
+
+def run(repeats: int = 3, json_path: str | None = None,
+        n_requests: int = 8, batch_slots: int = 4, max_new: int = 24,
+        rate_per_s: float = 40.0, seed: int = 0) -> dict:
+    cfg = get_config("minicpm-2b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    scfg = ServeConfig(batch_slots=batch_slots, max_len=128,
+                       max_new_tokens=max_new, seed=seed)
+    trace = make_traffic(n_requests, rate_per_s, (4, 8, 12, 24),
+                         cfg.vocab, seed=seed)
+    prompts = [p for _, p in trace]
+    results = {
+        "throughput": bench_throughput(cfg, params, scfg, prompts, repeats),
+        "latency": bench_latency(cfg, params, scfg, trace),
+        "meta": {"batch_slots": batch_slots, "max_new_tokens": max_new,
+                 "rate_per_s": rate_per_s, "seed": seed},
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=1)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=40.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    results = run(repeats=args.repeats, json_path=args.json,
+                  n_requests=args.requests, batch_slots=args.slots,
+                  max_new=args.max_new, rate_per_s=args.rate, seed=args.seed)
+    thr = results["throughput"]
+    if not thr["speedup_ok"]:
+        raise SystemExit(
+            f"continuous-batching speedup {thr['speedup']:.2f}x < 2x over "
+            f"the per-request loop at {thr['n_requests']} concurrent requests")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,14 +7,19 @@ the build on any metric regressing by more than ``--threshold`` (25% by
 default).  Metric direction is inferred from the key:
 
   * ``*_us`` / ``*us_per_call`` leaves — wall times, **lower** is better;
-  * leaves whose name contains ``speedup`` — ratios, **higher** is better;
+  * leaves whose name contains ``speedup`` or ends in ``_per_sec``
+    (throughputs) — **higher** is better;
   * booleans/counters/shape metadata — ignored (they gate elsewhere).
 
-``--history-out`` appends the current metrics to a rolling
-``BENCH_history.json`` (one entry per run, newest last) so the bench
-trajectory is downloadable as a single artifact instead of a pile of
-per-run files.  Pure stdlib on purpose: the comparator must keep working on
-a runner where jax is broken — that is exactly the day it matters.
+``--current`` accepts several directories — repeat runs of the same
+benchmarks — and gates on the per-metric **median** across them, so a single
+noisy shared-runner sample stops tripping the threshold; the repeat count is
+recorded in the history entry.  ``--history-out`` appends the (medianed)
+current metrics to a rolling ``BENCH_history.json`` (one entry per run,
+newest last) so the bench trajectory is downloadable as a single artifact
+instead of a pile of per-run files.  Pure stdlib on purpose: the comparator
+must keep working on a runner where jax is broken — that is exactly the day
+it matters.
 """
 from __future__ import annotations
 
@@ -47,9 +52,23 @@ def metric_direction(key: str) -> str | None:
     leaf = key.rsplit(".", 1)[-1]
     if leaf.endswith("_us") or leaf.endswith("us_per_call") or leaf == "us":
         return "lower"
-    if "speedup" in leaf:
+    if "speedup" in leaf or leaf.endswith("_per_sec"):
         return "higher"
     return None
+
+
+def median_metrics(samples: list[dict[str, float]]) -> dict[str, float]:
+    """Per-metric median across repeat runs; a metric present in only some
+    samples is medianed over the samples that have it."""
+    keys: set[str] = set()
+    for s in samples:
+        keys.update(s)
+    out: dict[str, float] = {}
+    for k in sorted(keys):
+        vals = sorted(s[k] for s in samples if k in s)
+        m = len(vals)
+        out[k] = vals[m // 2] if m % 2 else 0.5 * (vals[m // 2 - 1] + vals[m // 2])
+    return out
 
 
 def collect_dir(path: str) -> dict[str, float]:
@@ -113,6 +132,7 @@ def merge_history(
     metrics: dict[str, float],
     run_id: str,
     keep: int = HISTORY_KEEP,
+    repeats: int = 1,
 ) -> list[dict[str, Any]]:
     hist: list[dict[str, Any]] = []
     if os.path.isfile(history_path):
@@ -123,7 +143,7 @@ def merge_history(
                 hist = loaded
         except (OSError, json.JSONDecodeError):
             hist = []
-    hist.append({"run": run_id, "metrics": metrics})
+    hist.append({"run": run_id, "metrics": metrics, "repeats": repeats})
     hist = hist[-keep:]
     with open(history_path, "w") as fh:
         json.dump(hist, fh, indent=1)
@@ -134,8 +154,9 @@ def main(argv: Iterable[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", required=True,
                     help="dir of previous bench_*.json, or a BENCH_history.json")
-    ap.add_argument("--current", required=True,
-                    help="dir holding this run's bench_*.json files")
+    ap.add_argument("--current", required=True, nargs="+",
+                    help="dir(s) holding this run's bench_*.json files; "
+                         "several dirs = repeat runs, gated on the median")
     ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
                     help="relative regression that fails the gate (0.25 = 25%%)")
     ap.add_argument("--history-out", default=None,
@@ -144,15 +165,20 @@ def main(argv: Iterable[str] | None = None) -> int:
                     help="label for the history entry (commit sha)")
     args = ap.parse_args(list(argv) if argv is not None else None)
 
-    current = collect_dir(args.current)
-    if not current:
-        print(f"compare: no bench_*.json under {args.current}", file=sys.stderr)
+    samples = [s for s in (collect_dir(d) for d in args.current) if s]
+    if not samples:
+        print(f"compare: no bench_*.json under {' '.join(args.current)}",
+              file=sys.stderr)
         return 2
+    current = median_metrics(samples)
+    if len(samples) > 1:
+        print(f"compare: gating on the median of {len(samples)} repeat runs")
     baseline = load_baseline(args.baseline)
     if args.history_out:
-        merge_history(args.history_out, current, args.run_id)
+        merge_history(args.history_out, current, args.run_id,
+                      repeats=len(samples))
         print(f"history: appended {len(current)} metrics as run '{args.run_id}' "
-              f"-> {args.history_out}")
+              f"(median of {len(samples)} repeats) -> {args.history_out}")
     if not baseline:
         print("compare: no baseline found — first run, all "
               f"{len(current)} metrics recorded, gate passes")

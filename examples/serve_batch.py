@@ -1,5 +1,10 @@
 """Batched serving with the continuous-batching engine.
 
+Demonstrates the request-handle lifecycle: ``submit(prompt)`` returns a
+:class:`RequestHandle` immediately; the engine decodes every occupied slot
+with one batched step per ``step()`` call, streaming tokens into an
+optional per-request callback, and ``drain()`` runs the queue dry.
+
 Run:  PYTHONPATH=src python examples/serve_batch.py
 """
 import numpy as np
@@ -18,12 +23,24 @@ def main() -> None:
         ServeConfig(batch_slots=4, max_len=128, max_new_tokens=16, temperature=0.8),
     )
     rng = np.random.default_rng(0)
-    for rid in range(6):  # more requests than slots -> continuous admission
+    streamed: dict[int, int] = {}
+
+    def on_token(h, tok):  # fires as each token is harvested
+        streamed[h.rid] = streamed.get(h.rid, 0) + 1
+
+    handles = []
+    for _ in range(6):  # more requests than slots -> continuous admission
         prompt = rng.integers(0, cfg.vocab, size=rng.integers(3, 12))
-        eng.submit(rid, prompt.astype(np.int32))
-    results = eng.run()
-    for rid in sorted(results):
-        print(f"request {rid}: {len(results[rid])} tokens -> {results[rid][:8]}...")
+        handles.append(eng.submit(prompt.astype(np.int32), on_token=on_token))
+
+    # block for one specific request (drives the engine), then run the rest dry
+    first = handles[0].result()
+    print(f"request {handles[0].rid} finished first-class: {first[:8]}...")
+    results = eng.drain()
+    for h in sorted(handles, key=lambda h: h.rid):
+        assert h.done and results[h.rid] == h.tokens == h.result()
+        assert streamed[h.rid] == len(h.tokens)
+        print(f"request {h.rid}: {len(h.tokens)} tokens -> {h.tokens[:8]}...")
     assert len(results) == 6
     print("OK")
 

@@ -148,6 +148,69 @@ def deployment_database(backend: str = "xla") -> TuningDatabase:
     return db
 
 
+@dataclass
+class DeploymentContext:
+    """Shared deployment boilerplate for ``ServingEngine`` and ``Trainer``.
+
+    Both constructors need the same three things before their first jit:
+    parameters placed onto the mesh with the sharding planner's specs, a
+    tuning database (falling back to the warm pretuned
+    ``deployment_database``), and config-fingerprint-keyed jitted step
+    functions (so re-created engines / restarted trainers share one trace).
+    Build it with ``deployment_context``; one helper keeps the two
+    constructors from drifting.
+    """
+
+    cfg: ModelConfig
+    mesh: object
+    tuning_db: TuningDatabase
+    params: object
+    _specs: object = None
+
+    def place(self, tree):
+        """``device_put`` a parameter-shaped tree (e.g. AdamW moments) with
+        the same specs used for ``params``; identity without a mesh."""
+        import jax
+
+        if self._specs is None:
+            return tree
+        return jax.device_put(tree, self._specs)
+
+    def jitted(self, name: str, build, *key_parts):
+        """A jitted fn from the shared content-addressed cache, keyed on the
+        config fingerprint (+ any extra parts): equal-config deployments
+        share the function and its jax trace cache — restarts and slot
+        refills never retrace."""
+        from ..core.cache import fingerprint_obj, jit_cache
+
+        return jit_cache.get_or_build(
+            (name, fingerprint_obj(self.cfg), *key_parts), build
+        )
+
+
+def deployment_context(
+    cfg: ModelConfig,
+    params,
+    mesh=None,
+    tuning_db: TuningDatabase | None = None,
+) -> DeploymentContext:
+    """Resolve the deployment-time context: mesh-place ``params`` (any mesh
+    with the planner's axes, via ``launch.sharding.param_specs``) and pick
+    the tuning database (caller-staged, else the shared warm
+    ``deployment_database`` instance)."""
+    db = tuning_db if tuning_db is not None else deployment_database()
+    specs = None
+    if mesh is not None:
+        import jax
+
+        from ..launch.sharding import param_specs
+
+        shapes = jax.eval_shape(lambda p: p, params)
+        specs = param_specs(shapes, mesh, cfg=cfg)
+        params = jax.device_put(params, specs)
+    return DeploymentContext(cfg, mesh, db, params, specs)
+
+
 def plan_model(cfg: ModelConfig, seq: int, batch: int, db: TuningDatabase | None = None) -> list[ContractionPlan]:
     db = db or TuningDatabase()
     if not db.entries:

@@ -416,3 +416,56 @@ def decode_step(
 
     new_state["len"] = clen + s
     return _logits(cfg, params, x), new_state
+
+
+# ---------------------------------------------------------------------------
+# slot-batched decode (the continuous-batching serve path)
+# ---------------------------------------------------------------------------
+def init_slot_states(cfg: ModelConfig, n_slots: int, s_max: int) -> dict:
+    """Decode states for ``n_slots`` independent request slots, stacked on a
+    leading slot axis (each slot is a ``b=1``, ``ring=False`` decode state
+    with its own ``len`` scalar).  The serving engine writes a freshly
+    prefilled request into one slot with ``write_slot`` while the others are
+    mid-stream."""
+    st = init_decode_state(cfg, 1, s_max, ring=False)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros((n_slots,) + x.shape, x.dtype), st
+    )
+
+
+def write_slot(states: dict, i: int, state: dict) -> dict:
+    """Insert a single-slot (``b=1``) decode state at slot index ``i`` of a
+    slot-stacked state tree (a refill: the new request's prefilled cache and
+    length replace whatever the finished request left behind)."""
+    return jax.tree_util.tree_map(lambda s, x: s.at[i].set(x), states, state)
+
+
+def decode_slots(
+    cfg: ModelConfig, params: Params, states: dict, tokens: jax.Array
+) -> tuple[jax.Array, dict]:
+    """One decode step for every slot at once.
+
+    ``states`` is a slot-stacked tree (``init_slot_states``); ``tokens`` is
+    ``(N,)`` int32 — the last sampled token per slot.  Returns
+    ``(logits (N, V), new states)``.  Each slot advances at its own cache
+    length / write offset (``vmap`` over the slot axis), which is what lets
+    a freshly admitted request coexist with half-finished ones without any
+    retrace: the traced shapes depend only on ``(N, s_max)``.
+    """
+
+    def one(state, tok):
+        logits, st = decode_step(cfg, params, state, tok.reshape(1, 1))
+        return logits[0, -1], st
+
+    return jax.vmap(one)(states, tokens)
+
+
+def decode_slots_greedy(
+    cfg: ModelConfig, params: Params, states: dict, tokens: jax.Array
+) -> tuple[jax.Array, dict]:
+    """``decode_slots`` with the greedy sample fused on device: returns
+    ``((N,) int32 next tokens, new states)``.  Keeping the argmax on device
+    means the sampled tokens can feed the *next* dispatched step directly —
+    the engine's pipelined dispatch only blocks on them at harvest points."""
+    logits, states = decode_slots(cfg, params, states, tokens)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), states

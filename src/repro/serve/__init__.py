@@ -1,1 +1,6 @@
-from .engine import ServeConfig, ServingEngine  # noqa: F401
+from .engine import (  # noqa: F401
+    RequestHandle,
+    ServeConfig,
+    ServingEngine,
+    prefill_buckets,
+)

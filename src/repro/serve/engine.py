@@ -1,27 +1,44 @@
-"""Batched serving engine: continuous-batching prefill + decode.
+"""Continuous-batching serving engine: request handles, batched decode,
+pipelined dispatch.
 
 Static-shape design (TPU-friendly — no recompiles at runtime):
-  * one jitted ``prefill`` (B, S_prompt) and one jitted ``decode`` (B, 1);
-  * a fixed batch of request *slots*; finished slots are refilled from the
-    queue and their cache rows reset (continuous batching without dynamic
-    shapes: per-slot ``len`` vector + right-padded prompts);
-  * greedy or temperature sampling.
 
-The per-slot cache-length vector means a freshly admitted request coexists
-with half-finished ones — the decode step masks per slot via its own length.
+  * ``submit(prompt)`` returns a :class:`RequestHandle` (``.done``,
+    ``.tokens``, ``.result()``, optional per-token streaming callback);
+    ``step()`` advances the engine one scheduling iteration and ``drain()``
+    runs to completion.  ``run()`` survives as a deprecated wrapper.
+  * one jitted **batched decode** over all ``batch_slots`` at once
+    (``models.model.decode_slots``): every slot carries its own cache-length
+    scalar, so a freshly admitted request coexists with half-finished ones
+    and a slot refill never retraces — the jit cache key is config content
+    and the traced shapes depend only on ``(batch_slots, max_len)``.
+  * **shape-bucketed prefill admission**: prompts are right-padded to a
+    small set of power-of-two buckets, so arrivals hit a handful of cached
+    prefill traces instead of one per distinct prompt length.  Padded cache
+    rows are causally masked (the slot's ``len`` is reset to the true prompt
+    length) and overwritten as decode proceeds, so bucketing is bit-exact.
+    Families with token-recurrent state (hybrid / ssm) prefill at exact
+    length — a padded token would pollute the carried SSM state.
+  * **pipelined dispatch**: greedy sampling is fused into the jitted step
+    (on-device argmax feeding the next step's tokens), so step N+1 is
+    dispatched while step N's tokens are still in flight; the host blocks
+    only at harvest points, ``pipeline_depth`` steps behind the dispatch
+    frontier.  Temperature sampling needs the logits on the host each step
+    and therefore harvests synchronously.
 """
 from __future__ import annotations
 
+import warnings
+from collections import deque
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..core.cache import fingerprint_obj, jit_cache
 from ..core.database import TuningDatabase
 from ..models import model as M
 
@@ -34,55 +51,201 @@ class ServeConfig:
     temperature: float = 0.0
     seed: int = 0
     eos_id: int = -1  # -1: never stops early
+    # dispatch-ahead distance for the greedy path: how many batched steps may
+    # be in flight before the host blocks on the oldest one's tokens
+    pipeline_depth: int = 2
+    min_bucket: int = 16  # smallest prefill bucket (powers of two upward)
 
 
-@dataclass
-class Request:
+def prefill_buckets(max_len: int, min_bucket: int = 16) -> tuple[int, ...]:
+    """The padded prompt lengths prefill admission rounds up to: powers of
+    two from ``min_bucket`` to ``max_len`` (``max_len`` itself always
+    included so any prompt the cache can hold has a bucket)."""
+    out: list[int] = []
+    b = min_bucket
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return tuple(out)
+
+
+@dataclass(eq=False)
+class RequestHandle:
+    """A submitted request's live view: ``tokens`` grows as the engine
+    harvests decode steps, ``done`` flips when eos / ``max_new_tokens`` is
+    reached, and ``result()`` drives the engine until completion.  An
+    ``on_token`` callback (``fn(handle, token)``) streams tokens as they
+    are harvested."""
+
     rid: int
-    prompt: np.ndarray  # (S,)
-    output: list[int] = field(default_factory=list)
+    prompt: np.ndarray
+    tokens: list[int] = field(default_factory=list)
     done: bool = False
+    on_token: Callable[["RequestHandle", int], None] | None = None
+    _engine: "ServingEngine | None" = field(default=None, repr=False)
+
+    def result(self) -> list[int]:
+        """Block until this request completes (drives the owning engine's
+        ``step()`` loop) and return the generated tokens."""
+        while not self.done:
+            if self._engine is None or self._engine.step() == 0 and not self.done:
+                raise RuntimeError(f"request {self.rid} cannot complete: "
+                                   "engine is idle")
+        return self.tokens
+
+    # -- engine-side bookkeeping ------------------------------------------
+    def _append(self, tok: int, scfg: ServeConfig) -> None:
+        self.tokens.append(tok)
+        if self.on_token is not None:
+            self.on_token(self, tok)
+        if len(self.tokens) >= scfg.max_new_tokens or tok == scfg.eos_id:
+            self.done = True
 
 
 class ServingEngine:
-    """Single-host engine; under pjit the same step functions shard over the
-    mesh (batch -> data axis, heads/experts -> model axis)."""
+    """Single-host continuous-batching engine; under pjit the same step
+    functions shard over the mesh (batch -> data axis, heads/experts ->
+    model axis).
+
+    Lifecycle::
+
+        eng = ServingEngine(cfg, params, ServeConfig(...))
+        h = eng.submit(prompt)          # -> RequestHandle, queued
+        eng.step()                      # admit + one batched decode + harvest
+        eng.drain()                     # run to completion, {rid: tokens}
+        h.result()                      # or drive until this handle is done
+    """
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
                  tuning_db: TuningDatabase | None = None, mesh=None):
         """``mesh`` (any mesh with a ``model`` axis, e.g. from
         ``launch.mesh.make_mesh``) places the parameters with the sharding
-        planner's specs (``launch.sharding.param_specs``) before the first
-        jit — the decode step then partitions across the mesh via the
-        committed shardings instead of running single-device."""
-        from ..models.lowering import deployment_database
+        planner's specs before the first jit — the decode steps then
+        partition across the mesh via the committed shardings instead of
+        running single-device."""
+        from ..models.lowering import deployment_context
 
-        self.cfg, self.params, self.scfg = cfg, params, scfg
+        self.cfg, self.scfg = cfg, scfg
+        # Shared deployment boilerplate (mesh placement + warm pretuned
+        # tuning DB + fingerprint-keyed jit lookups) — same helper the
+        # Trainer constructor uses.
+        self._ctx = deployment_context(cfg, params, mesh=mesh,
+                                       tuning_db=tuning_db)
         self.mesh = mesh
-        if mesh is not None:
-            from ..launch.sharding import param_specs
+        self.params = self._ctx.params
+        self.tuning_db = self._ctx.tuning_db
+        # prefill (s >= 1) and slot-batched decode steps; content-keyed so
+        # re-created engines with an equal config share the functions and
+        # their jax trace caches — slot refills and restarts never retrace
+        self._decode = self._ctx.jitted(
+            "serve.decode", lambda: jax.jit(partial(M.decode_step, cfg)))
+        self._step_greedy = self._ctx.jitted(
+            "serve.decode_slots_greedy",
+            lambda: jax.jit(partial(M.decode_slots_greedy, cfg)))
+        self._step_logits = self._ctx.jitted(
+            "serve.decode_slots", lambda: jax.jit(partial(M.decode_slots, cfg)))
 
-            shapes = jax.eval_shape(lambda p: p, params)
-            self.params = jax.device_put(
-                params, param_specs(shapes, mesh, cfg=cfg))
-        # Deployments start warm: recipe resolution for this engine's
-        # contractions runs against the shipped pretuned transfer database
-        # (plus the canonical-GEMM model seed) unless the caller stages its
-        # own tuning data.
-        self.tuning_db = tuning_db if tuning_db is not None else deployment_database()
-        # One jitted decode step per config *content*: re-created engines
-        # with an equal config share the function and its jax trace cache,
-        # so slot refills and engine restarts never retrace.
-        self._decode = jit_cache.get_or_build(
-            ("serve.decode", fingerprint_obj(cfg)),
-            lambda: jax.jit(partial(M.decode_step, cfg)),
-        )
-        self.queue: list[Request] = []
-        self.active: dict[int, Request] = {}
+        n = scfg.batch_slots
+        self._buckets = prefill_buckets(scfg.max_len, scfg.min_bucket)
+        self._states = M.init_slot_states(cfg, n, scfg.max_len)
+        self._tokens = jnp.zeros((n,), jnp.int32)  # last sampled, per slot
+        self._slots: list[RequestHandle | None] = [None] * n
+        self._queue: deque[RequestHandle] = deque()
+        # in-flight dispatched steps: (device tokens (N,), {slot: handle})
+        self._pending: deque[tuple[Any, dict[int, RequestHandle]]] = deque()
+        self.results: dict[int, list[int]] = {}
+        self._next_rid = 0
         self.rng = np.random.default_rng(scfg.seed)
 
-    def submit(self, rid: int, prompt: np.ndarray) -> None:
-        self.queue.append(Request(rid, np.asarray(prompt, np.int32)))
+    # -- public API ------------------------------------------------------------
+    def submit(self, prompt, _legacy_prompt=None, *, rid: int | None = None,
+               on_token: Callable[[RequestHandle, int], None] | None = None,
+               ) -> RequestHandle:
+        """Queue a prompt; returns its :class:`RequestHandle`.
+
+        The legacy positional form ``submit(rid, prompt)`` still works but
+        is deprecated — pass the prompt first (an explicit id via ``rid=``).
+        """
+        if _legacy_prompt is not None:
+            warnings.warn(
+                "ServingEngine.submit(rid, prompt) is deprecated; use "
+                "submit(prompt, rid=...) -> RequestHandle",
+                DeprecationWarning, stacklevel=2)
+            rid, prompt = int(prompt), _legacy_prompt
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError(f"prompt must be a non-empty 1-D token array, "
+                             f"got shape {prompt.shape}")
+        if prompt.size > self._buckets[-1]:
+            raise ValueError(
+                f"prompt length {prompt.size} exceeds the largest prefill "
+                f"bucket {self._buckets[-1]} (max_len={self.scfg.max_len})")
+        if prompt.size + self.scfg.max_new_tokens > self.scfg.max_len:
+            raise ValueError(
+                f"prompt length {prompt.size} + max_new_tokens "
+                f"{self.scfg.max_new_tokens} exceeds max_len "
+                f"{self.scfg.max_len} (the decode cache would overflow)")
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid) + 1
+        h = RequestHandle(rid=rid, prompt=prompt, on_token=on_token,
+                          _engine=self)
+        self._queue.append(h)
+        return h
+
+    def step(self) -> int:
+        """One scheduling iteration: harvest the mature in-flight step,
+        admit queued requests into free slots, dispatch one batched decode
+        over the occupied slots.  Returns the number of occupied slots
+        after dispatch (0 = idle: queue empty, nothing in flight)."""
+        scfg = self.scfg
+        sync = scfg.temperature > 0.0
+        depth = 0 if sync else max(0, scfg.pipeline_depth)
+        self._admit()
+        live = {i: h for i, h in enumerate(self._slots) if h is not None}
+        if not live:
+            while self._pending:
+                self._harvest_one()
+            return 0
+        if sync:
+            logits, self._states = self._step_logits(
+                self.params, self._states, self._tokens)
+            self._pending.append((logits, live))
+        else:
+            # pipelined: the sampled tokens stay on device and feed the next
+            # dispatch; the host looks at them `pipeline_depth` steps later
+            next_tok, self._states = self._step_greedy(
+                self.params, self._states, self._tokens)
+            self._tokens = next_tok
+            self._pending.append((next_tok, live))
+        # block on overdue steps: at most `depth` stay in flight (0 = the
+        # host sees every step's result before dispatching the next)
+        while len(self._pending) > depth:
+            self._harvest_one()
+        return len(live)
+
+    def drain(self) -> dict[int, list[int]]:
+        """Run until the queue and every slot are empty; returns
+        ``rid -> generated tokens`` for every request finished so far."""
+        while self._queue or self._pending or any(
+                h is not None for h in self._slots):
+            self.step()
+        return self.results
+
+    def run(self) -> dict[int, list[int]]:
+        """Deprecated: drain the queue; returns rid -> generated tokens.
+
+        Migration: ``submit(prompt)`` now returns a :class:`RequestHandle`
+        — poll ``handle.done`` / read ``handle.tokens`` while calling
+        ``engine.step()``, call ``handle.result()`` to block for one
+        request, or ``engine.drain()`` for the old run-to-completion
+        behaviour (same return value as ``run()``).
+        """
+        warnings.warn(
+            "ServingEngine.run() is deprecated; use submit()/step()/drain() "
+            "or RequestHandle.result()", DeprecationWarning, stacklevel=2)
+        return self.drain()
 
     def explain_kernels(self) -> str:
         """Pass-pipeline + contraction-plan report for this engine's config
@@ -90,68 +253,87 @@ class ServingEngine:
         calls and re-created engines share one pipeline run)."""
         from ..models.lowering import kernel_report
 
-        return jit_cache.get_or_build(
-            ("serve.kernel_report",
-             fingerprint_obj(self.cfg, self.scfg.max_len, self.scfg.batch_slots),
-             self.tuning_db.uid, self.tuning_db.generation),
+        return self._ctx.jitted(
+            "serve.kernel_report",
             lambda: kernel_report(
                 self.cfg, seq=self.scfg.max_len, batch=self.scfg.batch_slots,
                 db=self.tuning_db,
             ),
+            self.scfg.max_len, self.scfg.batch_slots,
+            self.tuning_db.uid, self.tuning_db.generation,
         )
 
     # -- internals -------------------------------------------------------------
-    def _prefill_one(self, req: Request, state_b1) -> Any:
-        """Prefill a single request's row into a fresh (1, ...) state."""
-        toks = req.prompt[None, :]  # (1, S)
-        if self.cfg.family == "audio":
-            # stub frontend: encoder memory from pseudo frame embeddings
-            emb = jnp.zeros((1, self.cfg.frontend_len, self.cfg.d_model),
-                            M._dtype(self.cfg))
-            state_b1["memory"] = M.encode(self.cfg, self.params, emb)
-        logits, state_b1 = self._decode(self.params, state_b1, jnp.asarray(toks))
-        return logits[:, -1], state_b1
+    def _bucket_for(self, n: int) -> int:
+        # token-recurrent families can't mask a padded prompt token out of
+        # the carried state, so they prefill at exact length (still one
+        # cached trace per *distinct* length — the pre-bucketing behaviour)
+        if self.cfg.family in ("hybrid", "ssm"):
+            return n
+        return next(b for b in self._buckets if b >= n)
 
-    def _sample(self, logits: jax.Array) -> int:
-        lf = np.asarray(logits, np.float32)[0]
+    def _prefill(self, h: RequestHandle):
+        """Bucket-padded prefill of one request into a fresh b=1 state;
+        returns (last-valid-position logits (V,), state)."""
+        cfg, scfg = self.cfg, self.scfg
+        s = int(h.prompt.size)
+        bucket = self._bucket_for(s)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :s] = h.prompt
+        state = M.init_decode_state(cfg, 1, scfg.max_len, ring=False)
+        if cfg.family == "audio":
+            # stub frontend: encoder memory from pseudo frame embeddings
+            emb = jnp.zeros((1, cfg.frontend_len, cfg.d_model), M._dtype(cfg))
+            state["memory"] = M.encode(cfg, self.params, emb)
+        logits, state = self._decode(self.params, state, jnp.asarray(toks))
+        # reset to the true length: the padded cache rows beyond it are
+        # causally masked and get overwritten as decode proceeds
+        state["len"] = jnp.asarray(s, jnp.int32)
+        return logits[0, s - 1], state
+
+    def _sample_host(self, logits) -> int:
+        lf = np.asarray(logits, np.float32)
         if self.scfg.temperature <= 0.0:
             return int(lf.argmax())
         p = np.exp((lf - lf.max()) / self.scfg.temperature)
         p /= p.sum()
         return int(self.rng.choice(len(p), p=p))
 
-    # -- main loop ---------------------------------------------------------------
-    def run(self) -> dict[int, list[int]]:
-        """Drain the queue; returns rid -> generated tokens."""
-        cfg, scfg = self.cfg, self.scfg
-        results: dict[int, list[int]] = {}
-        # simple slot loop: admit -> prefill -> decode until done
-        while self.queue or self.active:
-            # admit up to batch_slots requests (per-request states kept
-            # separate; production path batches them — shapes are static)
-            while self.queue and len(self.active) < scfg.batch_slots:
-                req = self.queue.pop(0)
-                state = M.init_decode_state(cfg, 1, scfg.max_len, ring=False)
-                last_logits, state = self._prefill_one(req, state)
-                req._state = state  # type: ignore[attr-defined]
-                req._last = last_logits  # type: ignore[attr-defined]
-                self.active[req.rid] = req
-            # one decode step for every active request
-            for rid in list(self.active):
-                req = self.active[rid]
-                tok = self._sample(req._last)  # type: ignore[attr-defined]
-                req.output.append(tok)
-                if (
-                    len(req.output) >= scfg.max_new_tokens
-                    or tok == scfg.eos_id
-                ):
-                    req.done = True
-                    results[rid] = req.output
-                    del self.active[rid]
-                    continue
-                logits, st = self._decode(
-                    self.params, req._state, jnp.full((1, 1), tok, jnp.int32)
-                )
-                req._state = st  # type: ignore[attr-defined]
-                req._last = logits[:, -1]  # type: ignore[attr-defined]
-        return results
+    def _finish(self, h: RequestHandle) -> None:
+        self.results[h.rid] = h.tokens
+
+    def _admit(self) -> None:
+        """Fill free slots from the queue: bucketed prefill, sample the
+        first token, write the slot state."""
+        while self._queue and None in self._slots:
+            h = self._queue.popleft()
+            last_logits, state = self._prefill(h)
+            t0 = self._sample_host(last_logits)
+            h._append(t0, self.scfg)
+            if h.done:  # eos / max_new_tokens == 1: never occupies a slot
+                self._finish(h)
+                continue
+            i = self._slots.index(None)
+            self._slots[i] = h
+            self._states = M.write_slot(self._states, i, state)
+            self._tokens = self._tokens.at[i].set(t0)
+
+    def _harvest_one(self) -> None:
+        """Materialize the oldest in-flight step's tokens and credit them to
+        the handles that occupied each slot at dispatch time.  This is the
+        only point the host blocks on the device."""
+        out, live = self._pending.popleft()
+        arr = np.asarray(out)  # blocks until this step's results are ready
+        for i, h in live.items():
+            if h.done:  # finished in a younger harvest; overshoot dropped
+                continue
+            if arr.ndim == 1:  # greedy path: sampled tokens (N,)
+                tok = int(arr[i])
+            else:  # sync path: logits (N, V), sample on host
+                tok = self._sample_host(arr[i])
+                self._tokens = self._tokens.at[i].set(tok)
+            h._append(tok, self.scfg)
+            if h.done:
+                self._finish(h)
+                if self._slots[i] is h:
+                    self._slots[i] = None

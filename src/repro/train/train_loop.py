@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..core.cache import fingerprint_obj, jit_cache
+from ..core.cache import fingerprint_obj
 from ..core.database import TuningDatabase
 from ..data.pipeline import DataConfig, LMDataPipeline
 from ..models import model as M
@@ -135,38 +135,37 @@ class Trainer:
         from them) with ``launch.sharding.param_specs`` before the step jit
         is built — gradients then reduce across the mesh's data axes via the
         committed shardings (pjit), no step-function changes needed."""
-        from ..models.lowering import deployment_database
+        from ..models.lowering import deployment_context
 
         self.cfg, self.opt_cfg, self.tcfg = cfg, opt_cfg, tcfg
         self.mesh = mesh
-        # Deployments start warm: kernel planning resolves against the
-        # shipped pretuned transfer database unless the caller stages its own.
-        self.tuning_db = tuning_db if tuning_db is not None else deployment_database()
+        # Shared deployment boilerplate (mesh placement + warm pretuned
+        # tuning DB + fingerprint-keyed jit lookups) — same helper the
+        # ServingEngine constructor uses.
+        self._ctx = deployment_context(
+            cfg, M.init_params(cfg, jax.random.PRNGKey(seed)),
+            mesh=mesh, tuning_db=tuning_db)
+        self.tuning_db = self._ctx.tuning_db
         self.data = LMDataPipeline(data_cfg)
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
         self.monitor = StragglerMonitor()
         self.hb = Heartbeat(tcfg.heartbeat) if tcfg.heartbeat else None
-        self.params = M.init_params(cfg, jax.random.PRNGKey(seed))
+        self.params = self._ctx.params
         self.opt_state = adamw_init(self.params)
-        if mesh is not None:
-            from ..launch.sharding import param_specs
-
-            shapes = jax.eval_shape(lambda p: p, self.params)
-            specs = param_specs(shapes, mesh, cfg=cfg)
-            self.params = jax.device_put(self.params, specs)
-            # the AdamW moments are parameter-shaped: place them with the
-            # same specs so optimizer state scales with the mesh too
-            self.opt_state["m"] = jax.device_put(self.opt_state["m"], specs)
-            self.opt_state["v"] = jax.device_put(self.opt_state["v"], specs)
+        # the AdamW moments are parameter-shaped: place them with the same
+        # specs so optimizer state scales with the mesh too
+        self.opt_state["m"] = self._ctx.place(self.opt_state["m"])
+        self.opt_state["v"] = self._ctx.place(self.opt_state["v"])
         # Keyed by config content: a Trainer re-created with equal configs
         # (checkpoint-resume, fault-tolerant restarts) reuses the jitted
         # step and its traces instead of rebuilding and recompiling.
-        self.step_fn = jit_cache.get_or_build(
-            ("train.step", fingerprint_obj(cfg, opt_cfg), tcfg.accum_steps),
+        self.step_fn = self._ctx.jitted(
+            "train.step",
             lambda: jax.jit(
                 make_train_step(cfg, opt_cfg, accum_steps=tcfg.accum_steps),
                 donate_argnums=(0, 1),
             ),
+            fingerprint_obj(opt_cfg), tcfg.accum_steps,
         )
         self.step = 0
         self.history: list[dict] = []
@@ -177,14 +176,14 @@ class Trainer:
         from ..models.lowering import kernel_report
 
         dcfg = self.data.cfg
-        return jit_cache.get_or_build(
-            ("train.kernel_report",
-             fingerprint_obj(self.cfg, dcfg.seq_len, dcfg.global_batch),
-             self.tuning_db.uid, self.tuning_db.generation),
+        return self._ctx.jitted(
+            "train.kernel_report",
             lambda: kernel_report(
                 self.cfg, seq=dcfg.seq_len, batch=dcfg.global_batch,
                 db=self.tuning_db,
             ),
+            dcfg.seq_len, dcfg.global_batch,
+            self.tuning_db.uid, self.tuning_db.generation,
         )
 
     # -- checkpoint plumbing --------------------------------------------------

@@ -38,7 +38,17 @@ class TestMetrics:
         assert C.metric_direction("x:recurrence.scan_us") == "lower"
         assert C.metric_direction("x:a.us_per_call") == "lower"
         assert C.metric_direction("x:recurrence.speedup") == "higher"
+        assert C.metric_direction("x:throughput.tokens_per_sec") == "higher"
         assert C.metric_direction("x:meta.devices") is None
+
+    def test_median_odd_even_and_partial(self):
+        s1 = {"a": 1.0, "b": 10.0}
+        s2 = {"a": 3.0, "b": 20.0, "c": 7.0}
+        s3 = {"a": 100.0}
+        med = C.median_metrics([s1, s2, s3])
+        assert med["a"] == 3.0          # odd count -> middle sample
+        assert med["b"] == 15.0         # even count -> mean of middle two
+        assert med["c"] == 7.0          # present in one sample only
 
     def test_collect_dir_keys_by_stem(self, dirs):
         base, _ = dirs
@@ -118,6 +128,52 @@ class TestMain:
         write(cur / "bench_x.json", slow)
         rc = C.main(["--baseline", str(hist), "--current", str(cur)])
         assert rc == 1
+
+    def test_repeat_dirs_gate_on_median(self, dirs, tmp_path):
+        """One noisy sample out of three must not trip the gate; a majority
+        regression must."""
+        base, _ = dirs
+        write(base / "bench_x.json", BENCH)
+        reps = []
+        for i, scan_us in enumerate((100.0, 105.0, 400.0)):  # median 105: ok
+            d = tmp_path / f"rep{i}"
+            d.mkdir()
+            noisy = json.loads(json.dumps(BENCH))
+            noisy["recurrence"]["scan_us"] = scan_us
+            write(d / "bench_x.json", noisy)
+            reps.append(str(d))
+        assert C.main(["--baseline", str(base), "--current", *reps]) == 0
+        # now two of three samples regress -> median regresses -> gate fails
+        slow = json.loads(json.dumps(BENCH))
+        slow["recurrence"]["scan_us"] = 300.0
+        write(tmp_path / "rep1" / "bench_x.json", slow)
+        assert C.main(["--baseline", str(base), "--current", *reps]) == 1
+
+    def test_history_records_repeat_count(self, dirs, tmp_path):
+        base, _ = dirs
+        reps = []
+        for i in range(3):
+            d = tmp_path / f"r{i}"
+            d.mkdir()
+            write(d / "bench_x.json", BENCH)
+            reps.append(str(d))
+        hist = tmp_path / "BENCH_history.json"
+        assert C.main(["--baseline", str(base), "--current", *reps,
+                       "--history-out", str(hist), "--run-id", "sha1"]) == 0
+        entry = json.loads(hist.read_text())[-1]
+        assert entry["repeats"] == 3
+        assert entry["metrics"]["bench_x:recurrence.scan_us"] == 100.0
+
+    def test_empty_repeat_dir_skipped(self, dirs, tmp_path):
+        """A dir without bench JSONs (e.g. job not run) doesn't poison the
+        median — only non-empty sample dirs count."""
+        base, cur = dirs
+        write(base / "bench_x.json", BENCH)
+        write(cur / "bench_x.json", BENCH)
+        empty = tmp_path / "empty"
+        empty.mkdir()
+        assert C.main(["--baseline", str(base),
+                       "--current", str(cur), str(empty)]) == 0
 
     def test_corrupt_baseline_file_skipped(self, dirs):
         base, cur = dirs

@@ -201,8 +201,8 @@ class TestPlacement:
         eng = ServingEngine(
             cfg, params, ServeConfig(batch_slots=1, max_len=32,
                                      max_new_tokens=2), mesh=mesh)
-        eng.submit(0, np.array([1, 2], np.int32))
-        assert len(eng.run()[0]) == 2
+        h = eng.submit(np.array([1, 2], np.int32))
+        assert len(h.result()) == 2
 
     def test_engine_with_mesh_generates(self):
         from repro.models import model as M
@@ -214,15 +214,13 @@ class TestPlacement:
         eng = ServingEngine(
             cfg, params, ServeConfig(batch_slots=1, max_len=32,
                                      max_new_tokens=3), mesh=mesh)
-        eng.submit(0, np.array([1, 2, 3], np.int32))
-        out = eng.run()
-        assert len(out[0]) == 3
+        out = eng.submit(np.array([1, 2, 3], np.int32)).result()
+        assert len(out) == 3
         # mesh placement must not change greedy decoding
         eng2 = ServingEngine(
             cfg, params, ServeConfig(batch_slots=1, max_len=32,
                                      max_new_tokens=3))
-        eng2.submit(0, np.array([1, 2, 3], np.int32))
-        assert eng2.run()[0] == out[0]
+        assert eng2.submit(np.array([1, 2, 3], np.int32)).result() == out
 
     @pytest.mark.slow
     def test_trainer_with_mesh_steps(self, tmp_path):
