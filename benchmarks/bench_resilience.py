@@ -1,0 +1,217 @@
+"""Resilience benchmark: open-loop serving traffic with injected faults.
+
+Replays the same seeded open-loop trace twice against the continuous-
+batching engine — once fault-free, once with a seeded ``FaultPlan``
+poisoning a fixed fraction of requests (decode errors, one prefill-NaN)
+— and gates that the engine degrades *gracefully*:
+
+  * every request untouched by a fault completes **token-for-token
+    identical** to the fault-free run (isolation is bit-exact, not just
+    "didn't crash");
+  * surviving-request throughput (tokens of the surviving subset / that
+    run's elapsed time) stays >= ``--min-survivor-tps-ratio`` (default
+    0.8x) of the same subset's fault-free throughput;
+  * surviving-request p50/p99 latency is reported (``*_us`` metrics join
+    the perf-trend gate like every other benchmark).
+
+A third measurement exercises the hot-swap guardrail:
+``compile_with_degradation`` with an injected Pallas compile failure must
+fall through to the ``xla`` rung, and the degraded compile's wall time is
+reported (the cost of a backend fallback during live tuning).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_config
+from repro.fault import Fault, FaultPlan, compile_with_degradation
+from repro.models import model as M
+from repro.serve import RequestState, ServeConfig, ServingEngine
+
+from .bench_serve import make_traffic, percentile
+from .common import emit
+
+
+def pick_victims(n: int, fault_rate: float, seed: int) -> set[int]:
+    """Seeded choice of which rids the fault plan poisons (at least one
+    decode victim and one prefill-NaN victim when the trace allows)."""
+    rng = np.random.default_rng(seed + 1)
+    k = max(2, int(round(n * fault_rate)))
+    k = min(k, max(1, n - 1))  # always leave at least one survivor
+    return set(int(i) for i in rng.choice(n, size=k, replace=False))
+
+
+def make_plan(victims: set[int]) -> FaultPlan:
+    """One prefill-NaN victim, decode errors for the rest."""
+    vs = sorted(victims)
+    faults = [Fault("serve.prefill", "nan", key=vs[0])]
+    faults += [Fault("serve.decode", "error", key=rid) for rid in vs[1:]]
+    return FaultPlan(faults)
+
+
+def replay(cfg, params, scfg: ServeConfig, trace,
+           fault_plan: FaultPlan | None = None) -> dict:
+    """Open-loop replay (arrivals fixed by the trace); returns per-request
+    outcomes, tokens, latencies, and the run's elapsed time."""
+    eng = ServingEngine(cfg, params, scfg, fault_plan=fault_plan)
+    pending: list[tuple[float, object]] = []
+    done: dict[int, object] = {}
+    lat_s: dict[int, float] = {}
+    i = 0
+    t0 = time.perf_counter()
+    while i < len(trace) or pending:
+        now = time.perf_counter() - t0
+        while i < len(trace) and trace[i][0] <= now:
+            at, prompt = trace[i]
+            pending.append((at, eng.submit(prompt, rid=i)))
+            i += 1
+        if not pending:
+            time.sleep(min(max(trace[i][0] - now, 0.0), 0.001))
+            continue
+        eng.step()
+        now = time.perf_counter() - t0
+        still = []
+        for at, h in pending:
+            if h.done:
+                done[h.rid] = h
+                lat_s[h.rid] = now - at
+            else:
+                still.append((at, h))
+        pending = still
+    elapsed = time.perf_counter() - t0
+    return {
+        "handles": done, "latency_s": lat_s, "elapsed_s": elapsed,
+        "tokens": {rid: list(h.tokens) for rid, h in done.items()},
+        "states": {rid: h.state for rid, h in done.items()},
+    }
+
+
+def bench_traffic(cfg, params, scfg: ServeConfig, trace,
+                  fault_rate: float, seed: int, repeats: int) -> dict:
+    victims = pick_victims(len(trace), fault_rate, seed)
+    survivors = sorted(set(range(len(trace))) - victims)
+
+    def survivor_stats(run: dict) -> tuple[float, list[float]]:
+        toks = sum(len(run["tokens"][rid]) for rid in survivors)
+        return toks / run["elapsed_s"], [run["latency_s"][rid] for rid in survivors]
+
+    replay(cfg, params, scfg, trace)  # warmup: pay the jit traces untimed
+
+    free_tps, faulty_tps, p50s, p99s, identical = [], [], [], [], True
+    failed_as_expected = True
+    for _ in range(max(1, repeats)):
+        free = replay(cfg, params, scfg, trace)
+        faulty = replay(cfg, params, scfg, trace, fault_plan=make_plan(victims))
+        # bit-exact isolation: survivors unaffected by their neighbours' faults
+        identical &= all(
+            faulty["tokens"][rid] == free["tokens"][rid] for rid in survivors)
+        failed_as_expected &= all(
+            faulty["states"][rid] is RequestState.FAILED for rid in victims)
+        f_tps, _ = survivor_stats(free)
+        s_tps, s_lat = survivor_stats(faulty)
+        free_tps.append(f_tps)
+        faulty_tps.append(s_tps)
+        p50s.append(percentile(s_lat, 50) * 1e6)
+        p99s.append(percentile(s_lat, 99) * 1e6)
+    tps_free = float(np.median(free_tps))
+    tps_faulty = float(np.median(faulty_tps))
+    ratio = tps_faulty / tps_free
+    p50, p99 = float(np.median(p50s)), float(np.median(p99s))
+    emit("resilience_survivor_tokens_per_sec", 1e6 / max(tps_faulty, 1e-9),
+         f"{tps_faulty:.0f} tok/s ({ratio:.2f}x of fault-free)")
+    emit("resilience_survivor_p50_us", p50)
+    emit("resilience_survivor_p99_us", p99)
+    return {
+        "n_requests": len(trace), "n_victims": len(victims),
+        "survivor_tokens_per_sec": tps_faulty,
+        "survivor_tokens_per_sec_fault_free": tps_free,
+        "survivor_tps_ratio": ratio,
+        "survivor_p50_us": p50, "survivor_p99_us": p99,
+        "survivors_identical": bool(identical),
+        "victims_failed": bool(failed_as_expected),
+    }
+
+
+def bench_degradation(repeats: int) -> dict:
+    """Injected Pallas compile failure -> xla rung; time the fallback."""
+    from repro.tools.tune import build_program
+
+    prog = build_program("cloudsc", "erosion", "mini")
+    times = []
+    for _ in range(max(1, repeats)):
+        plan = FaultPlan([Fault("daisy.compile", "error", key="pallas_interpret")])
+        t0 = time.perf_counter()
+        res = compile_with_degradation(
+            prog, backends=("pallas_interpret", "xla"), fault_plan=plan)
+        times.append(time.perf_counter() - t0)
+        assert res.degraded and res.backend == "xla", (
+            f"degradation chain did not fall through: {res.backend}")
+    us = float(np.median(times)) * 1e6
+    emit("resilience_degraded_compile_us", us, "pallas->xla fallback")
+    return {"degraded_compile_us": us, "backend": "xla", "degraded": True}
+
+
+def run(repeats: int = 3, json_path: str | None = None,
+        n_requests: int = 8, batch_slots: int = 4, max_new: int = 16,
+        rate_per_s: float = 40.0, fault_rate: float = 0.25,
+        min_ratio: float = 0.8, seed: int = 0) -> dict:
+    cfg = get_config("minicpm-2b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    scfg = ServeConfig(batch_slots=batch_slots, max_len=128,
+                       max_new_tokens=max_new, seed=seed)
+    trace = make_traffic(n_requests, rate_per_s, (4, 8, 12), cfg.vocab,
+                         seed=seed)
+    results = {
+        "traffic": bench_traffic(cfg, params, scfg, trace, fault_rate, seed,
+                                 repeats),
+        "degradation": bench_degradation(repeats),
+        "meta": {"batch_slots": batch_slots, "max_new_tokens": max_new,
+                 "rate_per_s": rate_per_s, "fault_rate": fault_rate,
+                 "min_survivor_tps_ratio": min_ratio, "seed": seed},
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=1)
+    t = results["traffic"]
+    if not t["survivors_identical"]:
+        raise SystemExit("survivor outputs diverged from the fault-free run "
+                         "— fault isolation is not request-scoped")
+    if not t["victims_failed"]:
+        raise SystemExit("an injected-fault request did not transition to "
+                         "FAILED")
+    if t["survivor_tps_ratio"] < min_ratio:
+        raise SystemExit(
+            f"degraded-mode survivor throughput "
+            f"{t['survivor_tokens_per_sec']:.0f} tok/s is "
+            f"{t['survivor_tps_ratio']:.2f}x of fault-free "
+            f"(< {min_ratio:.2f}x)")
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=40.0)
+    ap.add_argument("--fault-rate", type=float, default=0.25)
+    ap.add_argument("--min-survivor-tps-ratio", type=float, default=0.8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(repeats=args.repeats, json_path=args.json, n_requests=args.requests,
+        batch_slots=args.slots, max_new=args.max_new, rate_per_s=args.rate,
+        fault_rate=args.fault_rate, min_ratio=args.min_survivor_tps_ratio,
+        seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,14 +11,15 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,fig6,fig7,fig9,table1,"
                          "fig11,kernels,roofline,cache,fusion,tiling,transfer,"
-                         "shard,serve")
+                         "shard,serve,resilience")
     ap.add_argument("--repeats", type=int, default=3)
     args = ap.parse_args()
 
-    from . import (bench_cache, bench_fusion, bench_serve, bench_shard,
-                   bench_tiling, bench_transfer, fig1_gemm, fig6_robustness,
-                   fig7_ablation, fig9_python, fig11_cloudsc_full,
-                   kernels_micro, roofline_report, table1_cloudsc)
+    from . import (bench_cache, bench_fusion, bench_resilience, bench_serve,
+                   bench_shard, bench_tiling, bench_transfer, fig1_gemm,
+                   fig6_robustness, fig7_ablation, fig9_python,
+                   fig11_cloudsc_full, kernels_micro, roofline_report,
+                   table1_cloudsc)
 
     suites = {
         "cache": lambda: bench_cache.run(repeats=args.repeats),
@@ -27,6 +28,7 @@ def main() -> None:
         "transfer": lambda: bench_transfer.run(repeats=args.repeats),
         "shard": lambda: bench_shard.run(repeats=args.repeats),
         "serve": lambda: bench_serve.run(repeats=args.repeats),
+        "resilience": lambda: bench_resilience.run(repeats=args.repeats),
         "fig1": lambda: fig1_gemm.run(repeats=args.repeats),
         "fig6": lambda: fig6_robustness.run(repeats=args.repeats),
         "fig7": lambda: fig7_ablation.run(repeats=args.repeats),

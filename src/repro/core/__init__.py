@@ -46,6 +46,6 @@ from .partition import (  # noqa: F401
 )
 from .tiling import TilePlan, TilingError, plan_nest_tiling  # noqa: F401
 from .cache import CacheStats, CompilationCache, fingerprint_obj  # noqa: F401
-from .database import TuningDatabase  # noqa: F401
+from .database import DatabaseCorruption, TuningDatabase  # noqa: F401
 from .recipes import Recipe  # noqa: F401
 from .scheduler import Daisy, random_inputs  # noqa: F401

@@ -18,10 +18,12 @@ framework; the format is versioned (v2 adds the ``version`` field) and
 """
 from __future__ import annotations
 
+import hashlib
 import itertools
 import json
 import math
 import os
+import sys
 from dataclasses import dataclass, field
 from pathlib import Path
 
@@ -31,6 +33,11 @@ from .embedding import distance
 from .recipes import Recipe
 
 SCHEMA_VERSION = 2
+
+
+class DatabaseCorruption(RuntimeError):
+    """A database file (and its ``.bak``, if any) failed to parse or failed
+    its content checksum."""
 
 # Directory holding the shipped pretuned databases (``repro.tools.tune``
 # output).  Overridable for deployments that stage their own tuning data.
@@ -232,6 +239,33 @@ class TuningDatabase:
         return None, "miss"
 
     # -- persistence ---------------------------------------------------------
+    #
+    # Durability contract: ``save`` is atomic (tmp + fsync + ``os.replace``)
+    # so a reader never sees a half-written file, the document carries a
+    # content checksum so bit rot / manual edits / torn copies are *detected*
+    # rather than silently deserialized, and each successful save refreshes a
+    # ``.bak`` sibling that ``load`` falls back to when the primary is
+    # corrupt.  The tuning pool checkpoints through ``save`` after every
+    # completed nest, so this path must survive being interrupted at any
+    # instruction.
+
+    @staticmethod
+    def _checksum(doc: dict) -> str:
+        """Content checksum over the canonical (sorted-key, compact) JSON of
+        everything except the checksum field itself."""
+        body = {k: v for k, v in doc.items() if k != "checksum"}
+        blob = json.dumps(body, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()
+
+    @staticmethod
+    def _write_atomic(path: Path, text: str) -> None:
+        tmp = path.with_name(f".{path.name}.{os.getpid()}.tmp")
+        with open(tmp, "w") as f:
+            f.write(text)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+
     def save(self, path: str | Path) -> None:
         data = [
             {
@@ -249,11 +283,52 @@ class TuningDatabase:
         doc = {"version": SCHEMA_VERSION, "radius": self.radius, "entries": data}
         if self.meta:
             doc["meta"] = self.meta
-        Path(path).write_text(json.dumps(doc, indent=1))
+        doc["checksum"] = self._checksum(doc)
+        path = Path(path)
+        text = json.dumps(doc, indent=1)
+        self._write_atomic(path, text)
+        # second copy only after the primary landed: the .bak always holds a
+        # complete, checksummed document from some successful save
+        self._write_atomic(path.with_suffix(path.suffix + ".bak"), text)
+
+    @staticmethod
+    def _parse(path: Path) -> dict:
+        raw = json.loads(path.read_text())
+        if not isinstance(raw, dict) or "entries" not in raw:
+            raise DatabaseCorruption(f"{path}: not a tuning-database document")
+        stored = raw.get("checksum")
+        if stored is not None and stored != TuningDatabase._checksum(raw):
+            raise DatabaseCorruption(f"{path}: content checksum mismatch")
+        return raw
 
     @staticmethod
     def load(path: str | Path) -> "TuningDatabase":
-        raw = json.loads(Path(path).read_text())
+        """Load a database, recovering from corruption via the ``.bak``.
+
+        A primary that fails to parse or fails its checksum is reported on
+        stderr and the ``.bak`` sibling (written on every successful save)
+        is tried; :class:`DatabaseCorruption` is raised only when both are
+        unreadable.  A version newer than this code supports is *not*
+        corruption and raises ``ValueError`` immediately.
+        """
+        path = Path(path)
+        bak = path.with_suffix(path.suffix + ".bak")
+        try:
+            raw = TuningDatabase._parse(path)
+        except (json.JSONDecodeError, DatabaseCorruption, KeyError) as primary_err:
+            if not bak.exists():
+                raise DatabaseCorruption(
+                    f"{path}: unreadable ({primary_err}) and no .bak exists"
+                ) from primary_err
+            print(f"WARNING: {path} is corrupt ({primary_err}); "
+                  f"recovering from {bak.name}", file=sys.stderr)
+            try:
+                raw = TuningDatabase._parse(bak)
+            except (json.JSONDecodeError, DatabaseCorruption, KeyError) as bak_err:
+                raise DatabaseCorruption(
+                    f"{path}: both primary ({primary_err}) and backup "
+                    f"({bak_err}) are unreadable"
+                ) from primary_err
         version = raw.get("version", 1)  # v1 files carry no version field
         if version > SCHEMA_VERSION:
             raise ValueError(

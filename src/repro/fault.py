@@ -1,0 +1,277 @@
+"""Shared fault-tolerance layer: heartbeats, restarts, fault injection,
+backend degradation.
+
+Promoted from ``train/fault.py`` (PR 6) into a subsystem every deployment
+surface builds on:
+
+  * **training** — ``Heartbeat`` / ``StragglerMonitor`` / ``RestartPolicy``
+    drive ``Trainer.run_resilient`` (restore-from-checkpoint supervision);
+  * **serving** — ``serve.engine`` isolates request-scoped failures (raised
+    prefill/decode, non-finite logits, deadlines, cancellation) so one bad
+    request never kills the continuous batch, and degrades failed Pallas
+    compiles across backends via ``compile_with_degradation``;
+  * **tuning** — ``tools/tune`` wraps its spawn pool in bounded
+    ``RestartPolicy`` retries, quarantines nests that crash workers, and
+    checkpoints completed results so a ``BrokenProcessPool`` loses nothing;
+  * **persistence** — ``TuningDatabase.save`` is atomic + checksummed with a
+    ``.bak`` fallback on corrupted loads.
+
+All of it is proven by deterministic injection: a seeded :class:`FaultPlan`
+names *where* (site), *what* (kind) and *when* (key / firing count) a fault
+strikes, so tests and ``benchmarks/bench_resilience.py`` replay the exact
+same failure schedule every run.
+
+Failure model on a real cluster: (a) hard node loss — missed heartbeats,
+restart-from-checkpoint on a re-formed mesh (checkpoints are device-count
+agnostic); (b) stragglers — per-step wall time over a multiple of the EMA,
+flagged for replacement (synchronous SPMD cannot proceed without the host);
+(c) numeric poison — NaN/inf gradients skipped inside the jitted step
+(``adamw_update``), NaN logits failing only the poisoned request.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from dataclasses import dataclass, field, replace
+from pathlib import Path
+from typing import Any, Callable
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# heartbeats / stragglers / restarts (the PR-6 trainer scaffolding, shared)
+# ---------------------------------------------------------------------------
+
+
+class Heartbeat:
+    """Background thread stamping a file; a supervisor (or test) detects a
+    dead/stuck process by file age.  Stamps are written atomically (tmp +
+    ``os.replace``) so a reader can never parse a half-written file and
+    mistake a live process for a dead one."""
+
+    def __init__(self, path: str | Path, interval: float = 1.0):
+        self.path = Path(path)
+        self.interval = interval
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    def start(self) -> None:
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _stamp(self) -> None:
+        tmp = self.path.with_name(f".{self.path.name}.{os.getpid()}.tmp")
+        tmp.write_text(json.dumps({"t": time.time(), "pid": os.getpid()}))
+        os.replace(tmp, self.path)
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            self._stamp()
+            self._stop.wait(self.interval)
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2.0)
+
+    @staticmethod
+    def age(path: str | Path) -> float | None:
+        p = Path(path)
+        if not p.exists():
+            return None
+        try:
+            return time.time() - json.loads(p.read_text())["t"]
+        except Exception:
+            return None
+
+
+@dataclass
+class StragglerMonitor:
+    """EMA step-time tracker; flags steps slower than ``threshold`` x EMA."""
+
+    threshold: float = 3.0
+    alpha: float = 0.1
+    ema: float | None = None
+    flagged: list[tuple[int, float]] = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        is_straggler = self.ema is not None and dt > self.threshold * self.ema
+        if is_straggler:
+            self.flagged.append((step, dt))
+        # don't fold outliers into the EMA
+        if not is_straggler:
+            self.ema = dt if self.ema is None else (1 - self.alpha) * self.ema + self.alpha * dt
+        return is_straggler
+
+
+@dataclass
+class RestartPolicy:
+    """Bounded retry-with-backoff loop.  Drives ``Trainer.run_resilient``
+    (restore-from-checkpoint) and the tune pool's per-task retries."""
+
+    max_restarts: int = 3
+    backoff_s: float = 0.0
+    restarts: int = 0
+
+    def should_restart(self, exc: Exception) -> bool:
+        self.restarts += 1
+        if self.restarts > self.max_restarts:
+            return False
+        if self.backoff_s:
+            time.sleep(self.backoff_s * self.restarts)
+        return True
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault injection
+# ---------------------------------------------------------------------------
+
+
+class FaultInjected(RuntimeError):
+    """The error a ``kind='error'`` fault raises at its injection site."""
+
+
+@dataclass
+class Fault:
+    """One scheduled fault.
+
+    ``site`` names the injection point (e.g. ``serve.prefill``,
+    ``serve.decode``, ``serve.step``, ``tune.worker``, ``daisy.compile``,
+    ``db.save``); ``kind`` what happens there (``error`` raises
+    :class:`FaultInjected`, ``nan`` poisons logits, ``crash`` hard-kills a
+    pool worker, ``hang`` stalls it, ``truncate`` clips a file); ``key``
+    restricts the fault to one request rid / nest fingerprint / backend
+    (``None`` matches any); ``times`` is how many firings before the fault
+    burns out (< 0 = unlimited).
+    """
+
+    site: str
+    kind: str = "error"
+    key: Any = None
+    times: int = 1
+
+
+class FaultPlan:
+    """A seeded, deterministic schedule of faults.
+
+    Explicit :class:`Fault` entries fire when their site/key matches (each
+    at most ``times`` times); on top of that, a ``rate`` in (0, 1] arms
+    every listed ``sites`` entry with seeded random ``error`` faults —
+    the open-loop resilience benchmark's traffic poisoner.  Every firing is
+    recorded in ``fired`` so tests can assert the schedule was exercised.
+    """
+
+    def __init__(self, faults: tuple[Fault, ...] | list[Fault] = (),
+                 seed: int = 0, rate: float = 0.0,
+                 sites: tuple[str, ...] = ()):
+        self.faults = [replace(f) for f in faults]  # own the mutable counters
+        self.rate = float(rate)
+        self.sites = tuple(sites)
+        self.rng = np.random.default_rng(seed)
+        self.fired: list[tuple[str, Any, str]] = []
+
+    def fire(self, site: str, key: Any = None) -> Fault | None:
+        """The fault striking ``site`` for ``key`` right now, or None.
+        A returned fault's firing is consumed and recorded."""
+        for f in self.faults:
+            if f.site != site or f.times == 0:
+                continue
+            if f.key is not None and f.key != key:
+                continue
+            if f.times > 0:
+                f.times -= 1
+            self.fired.append((site, key, f.kind))
+            return f
+        if self.rate > 0.0 and site in self.sites and self.rng.random() < self.rate:
+            self.fired.append((site, key, "error"))
+            return Fault(site, "error", key=key, times=0)
+        return None
+
+    def maybe_raise(self, site: str, key: Any = None) -> Fault | None:
+        """``fire``, raising :class:`FaultInjected` for ``error`` faults;
+        non-error faults are returned for the site to interpret."""
+        f = self.fire(site, key)
+        if f is not None and f.kind == "error":
+            raise FaultInjected(f"injected fault at {site} (key={key!r})")
+        return f
+
+    def count(self, site: str | None = None) -> int:
+        return sum(1 for s, _, _ in self.fired if site is None or s == site)
+
+
+def truncate_file(path: str | Path, keep_fraction: float = 0.5) -> None:
+    """Clip a file to a prefix — the ``truncate`` fault: what a crash or a
+    full disk leaves behind when a writer was not atomic."""
+    p = Path(path)
+    data = p.read_bytes()
+    p.write_bytes(data[: max(0, int(len(data) * keep_fraction))])
+
+
+# ---------------------------------------------------------------------------
+# backend degradation chain
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DegradedCompile:
+    """Result of :func:`compile_with_degradation`: the compiled fn, its
+    plan, which backend finally succeeded, and the per-backend errors the
+    chain absorbed on the way (empty = first choice worked)."""
+
+    fn: Callable
+    plan: Any
+    backend: str
+    errors: list[tuple[str, Exception]] = field(default_factory=list)
+
+    @property
+    def degraded(self) -> bool:
+        return bool(self.errors)
+
+
+def compile_with_degradation(
+    program,
+    backends: tuple[str, ...] = ("pallas", "xla"),
+    db=None,
+    mesh=None,
+    shard_axis: str = "data",
+    fault_plan: FaultPlan | None = None,
+    validate: bool = True,
+) -> DegradedCompile:
+    """Compile a canonical program, degrading across backends on failure.
+
+    Tries each backend in order through a fresh ``Daisy`` — the existing
+    ``Daisy._backend_recipe`` degradation maps Pallas-kind recipes onto
+    their XLA equivalents under ``'xla'``, so a kernel that fails to build
+    still serves through the library/vector lowering.  Because jit is lazy,
+    a compile that "succeeds" can still blow up at first call — so each
+    rung is *validated* by executing once on random inputs (hot-swap
+    guardrail: never promote an fn that has not run).  Raises the *first*
+    backend's error (with the rest chained) only when every rung fails.
+    Injection site ``daisy.compile`` (key = backend) simulates compile
+    failures per rung.
+    """
+    from .core.scheduler import Daisy, random_inputs
+
+    if not backends:
+        raise ValueError("compile_with_degradation needs at least one backend")
+    errors: list[tuple[str, Exception]] = []
+    for b in backends:
+        try:
+            if fault_plan is not None:
+                fault_plan.maybe_raise("daisy.compile", key=b)
+            d = Daisy(db=db, backend=b, mesh=mesh, shard_axis=shard_axis)
+            fn, plan = d.compile(program)
+            if validate:
+                out = fn(random_inputs(program))
+                for v in (out.values() if isinstance(out, dict) else [out]):
+                    np.asarray(v)  # force device execution to completion
+            return DegradedCompile(fn, plan, b, errors)
+        except Exception as e:  # noqa: BLE001 — every rung failure degrades
+            errors.append((b, e))
+    raise RuntimeError(
+        f"all backends failed compiling {getattr(program, 'name', program)!r}: "
+        + "; ".join(f"{b}: {e}" for b, e in errors)
+    ) from errors[0][1]

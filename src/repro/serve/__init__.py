@@ -1,5 +1,7 @@
 from .engine import (  # noqa: F401
+    NonFiniteLogits,
     RequestHandle,
+    RequestState,
     ServeConfig,
     ServingEngine,
     prefill_buckets,

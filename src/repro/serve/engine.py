@@ -1,12 +1,13 @@
 """Continuous-batching serving engine: request handles, batched decode,
-pipelined dispatch.
+pipelined dispatch, request-scoped fault isolation.
 
 Static-shape design (TPU-friendly — no recompiles at runtime):
 
-  * ``submit(prompt)`` returns a :class:`RequestHandle` (``.done``,
-    ``.tokens``, ``.result()``, optional per-token streaming callback);
-    ``step()`` advances the engine one scheduling iteration and ``drain()``
-    runs to completion.  ``run()`` survives as a deprecated wrapper.
+  * ``submit(prompt)`` returns a :class:`RequestHandle` (``.state``,
+    ``.tokens``, ``.result()``, ``.cancel()``, optional per-token streaming
+    callback); ``step()`` advances the engine one scheduling iteration and
+    ``drain()`` runs to completion.  ``run()`` survives as a deprecated
+    wrapper.
   * one jitted **batched decode** over all ``batch_slots`` at once
     (``models.model.decode_slots``): every slot carries its own cache-length
     scalar, so a freshly admitted request coexists with half-finished ones
@@ -25,12 +26,40 @@ Static-shape design (TPU-friendly — no recompiles at runtime):
     only at harvest points, ``pipeline_depth`` steps behind the dispatch
     frontier.  Temperature sampling needs the logits on the host each step
     and therefore harvests synchronously.
+
+Failure model (request-scoped — one bad request never kills the batch):
+
+  * a request whose prefill or harvest raises, or whose logits go
+    non-finite (checked at prefill for every family and per slot on the
+    synchronous sampling path), transitions to ``FAILED`` with the captured
+    error; its slot is recycled and the surviving slots keep decoding
+    token-for-token as if the failed request had hit eos.
+  * ``submit(..., timeout_s=)`` arms a per-request deadline: overdue
+    requests transition to ``TIMED_OUT`` at the next harvest (or while
+    still queued), freeing their slot.
+  * ``handle.cancel()`` withdraws a queued request or recycles a running
+    one (``CANCELLED``); in-flight overshoot tokens are dropped at harvest.
+  * a failure of the whole batched step fails the requests that occupied
+    slots at dispatch time, but the engine itself stays serviceable.
+  * ``compile_resilient`` is the hot-swap guardrail for tuned kernels: a
+    candidate program is compiled *and validated* under each backend in
+    order (``pallas`` → ``xla`` by default, via ``Daisy``'s backend
+    degradation), so a broken Pallas build degrades to the XLA lowering
+    instead of surfacing mid-traffic; degradations are recorded on
+    ``engine.degradations``.
+
+Deterministic fault injection (tests + ``bench_resilience``): pass a seeded
+``fault.FaultPlan``; sites ``serve.prefill`` / ``serve.decode`` /
+``serve.logits`` / ``serve.step`` poison exactly the scheduled requests.
 """
 from __future__ import annotations
 
+import time
 import warnings
 from collections import deque
+from concurrent.futures import CancelledError
 from dataclasses import dataclass, field
+from enum import Enum
 from functools import partial
 from typing import Any, Callable
 
@@ -40,7 +69,28 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core.database import TuningDatabase
+from ..fault import FaultInjected, FaultPlan
 from ..models import model as M
+
+
+class NonFiniteLogits(RuntimeError):
+    """A request's logits went NaN/inf — numeric poison isolated to the one
+    request instead of propagating through the batch."""
+
+
+class RequestState(Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    COMPLETED = "completed"
+    FAILED = "failed"
+    TIMED_OUT = "timed_out"
+    CANCELLED = "cancelled"
+
+
+TERMINAL_STATES = frozenset(
+    {RequestState.COMPLETED, RequestState.FAILED, RequestState.TIMED_OUT,
+     RequestState.CANCELLED}
+)
 
 
 @dataclass
@@ -73,26 +123,63 @@ def prefill_buckets(max_len: int, min_bucket: int = 16) -> tuple[int, ...]:
 @dataclass(eq=False)
 class RequestHandle:
     """A submitted request's live view: ``tokens`` grows as the engine
-    harvests decode steps, ``done`` flips when eos / ``max_new_tokens`` is
-    reached, and ``result()`` drives the engine until completion.  An
-    ``on_token`` callback (``fn(handle, token)``) streams tokens as they
-    are harvested."""
+    harvests decode steps, ``state`` walks QUEUED → RUNNING → one terminal
+    state (COMPLETED / FAILED / TIMED_OUT / CANCELLED), and ``result()``
+    drives the engine until completion.  An ``on_token`` callback
+    (``fn(handle, token)``) streams tokens as they are harvested; ``error``
+    holds the captured exception of a FAILED request."""
 
     rid: int
     prompt: np.ndarray
     tokens: list[int] = field(default_factory=list)
-    done: bool = False
+    state: RequestState = RequestState.QUEUED
+    error: BaseException | None = None
+    deadline: float | None = None  # absolute time.monotonic() cutoff
     on_token: Callable[["RequestHandle", int], None] | None = None
     _engine: "ServingEngine | None" = field(default=None, repr=False)
 
+    @property
+    def done(self) -> bool:
+        """True once the request reached any terminal state."""
+        return self.state in TERMINAL_STATES
+
+    @property
+    def failed(self) -> bool:
+        return self.state is RequestState.FAILED
+
     def result(self) -> list[int]:
         """Block until this request completes (drives the owning engine's
-        ``step()`` loop) and return the generated tokens."""
+        ``step()`` loop) and return the generated tokens.  Raises the
+        captured error for a FAILED request, :class:`TimeoutError` for a
+        TIMED_OUT one and :class:`CancelledError` after ``cancel()``."""
         while not self.done:
             if self._engine is None or self._engine.step() == 0 and not self.done:
                 raise RuntimeError(f"request {self.rid} cannot complete: "
                                    "engine is idle")
+        if self.state is RequestState.FAILED:
+            raise self.error if self.error is not None else \
+                RuntimeError(f"request {self.rid} failed")
+        if self.state is RequestState.TIMED_OUT:
+            raise TimeoutError(
+                f"request {self.rid} exceeded its deadline after "
+                f"{len(self.tokens)} token(s)")
+        if self.state is RequestState.CANCELLED:
+            raise CancelledError(f"request {self.rid} was cancelled")
         return self.tokens
+
+    def cancel(self) -> bool:
+        """Withdraw the request: True if it transitioned to CANCELLED,
+        False if it had already reached a terminal state."""
+        if self.done:
+            return False
+        if self._engine is not None:
+            self._engine._cancel(self)
+        else:
+            self.state = RequestState.CANCELLED
+        return True
+
+    def _overdue(self, now: float) -> bool:
+        return self.deadline is not None and now > self.deadline
 
     # -- engine-side bookkeeping ------------------------------------------
     def _append(self, tok: int, scfg: ServeConfig) -> None:
@@ -100,7 +187,7 @@ class RequestHandle:
         if self.on_token is not None:
             self.on_token(self, tok)
         if len(self.tokens) >= scfg.max_new_tokens or tok == scfg.eos_id:
-            self.done = True
+            self.state = RequestState.COMPLETED
 
 
 class ServingEngine:
@@ -111,19 +198,25 @@ class ServingEngine:
     Lifecycle::
 
         eng = ServingEngine(cfg, params, ServeConfig(...))
-        h = eng.submit(prompt)          # -> RequestHandle, queued
+        h = eng.submit(prompt, timeout_s=5.0)  # -> RequestHandle, queued
         eng.step()                      # admit + one batched decode + harvest
         eng.drain()                     # run to completion, {rid: tokens}
         h.result()                      # or drive until this handle is done
+        h.cancel()                      # withdraw a queued/running request
+
+    ``drain()`` (and ``shutdown()``) closes the engine: later ``submit``
+    calls raise instead of silently corrupting slot bookkeeping.
     """
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
-                 tuning_db: TuningDatabase | None = None, mesh=None):
+                 tuning_db: TuningDatabase | None = None, mesh=None,
+                 fault_plan: FaultPlan | None = None):
         """``mesh`` (any mesh with a ``model`` axis, e.g. from
         ``launch.mesh.make_mesh``) places the parameters with the sharding
         planner's specs before the first jit — the decode steps then
         partition across the mesh via the committed shardings instead of
-        running single-device."""
+        running single-device.  ``fault_plan`` arms deterministic fault
+        injection (tests / resilience benchmark)."""
         from ..models.lowering import deployment_context
 
         self.cfg, self.scfg = cfg, scfg
@@ -135,6 +228,7 @@ class ServingEngine:
         self.mesh = mesh
         self.params = self._ctx.params
         self.tuning_db = self._ctx.tuning_db
+        self.fault_plan = fault_plan
         # prefill (s >= 1) and slot-batched decode steps; content-keyed so
         # re-created engines with an equal config share the functions and
         # their jax trace caches — slot refills and restarts never retrace
@@ -155,14 +249,26 @@ class ServingEngine:
         # in-flight dispatched steps: (device tokens (N,), {slot: handle})
         self._pending: deque[tuple[Any, dict[int, RequestHandle]]] = deque()
         self.results: dict[int, list[int]] = {}
+        self.failed: dict[int, RequestHandle] = {}
+        # (program-name, from-backend, to-backend) of every compile that
+        # degraded down the backend chain (see compile_resilient)
+        self.degradations: list[tuple[str, str, str]] = []
+        self._inflight: dict[int, RequestHandle] = {}
+        self._closed = False
         self._next_rid = 0
         self.rng = np.random.default_rng(scfg.seed)
 
     # -- public API ------------------------------------------------------------
     def submit(self, prompt, _legacy_prompt=None, *, rid: int | None = None,
                on_token: Callable[[RequestHandle, int], None] | None = None,
+               timeout_s: float | None = None,
                ) -> RequestHandle:
         """Queue a prompt; returns its :class:`RequestHandle`.
+
+        ``timeout_s`` arms a per-request deadline (measured from submission):
+        an overdue request transitions to TIMED_OUT at the next harvest and
+        frees its slot.  Duplicate in-flight ``rid``s and submissions after
+        ``drain()``/``shutdown()`` are rejected.
 
         The legacy positional form ``submit(rid, prompt)`` still works but
         is deprecated — pass the prompt first (an explicit id via ``rid=``).
@@ -173,6 +279,10 @@ class ServingEngine:
                 "submit(prompt, rid=...) -> RequestHandle",
                 DeprecationWarning, stacklevel=2)
             rid, prompt = int(prompt), _legacy_prompt
+        if self._closed:
+            raise RuntimeError(
+                "ServingEngine is shut down (drain()/shutdown() was called); "
+                "create a new engine to serve more requests")
         prompt = np.asarray(prompt, np.int32)
         if prompt.ndim != 1 or prompt.size == 0:
             raise ValueError(f"prompt must be a non-empty 1-D token array, "
@@ -188,9 +298,16 @@ class ServingEngine:
                 f"{self.scfg.max_len} (the decode cache would overflow)")
         if rid is None:
             rid = self._next_rid
+        elif rid in self._inflight:
+            raise ValueError(
+                f"rid {rid} is already in flight (state "
+                f"{self._inflight[rid].state.value}); duplicate ids would "
+                "corrupt slot bookkeeping — pass a fresh rid or omit it")
         self._next_rid = max(self._next_rid, rid) + 1
+        deadline = time.monotonic() + timeout_s if timeout_s is not None else None
         h = RequestHandle(rid=rid, prompt=prompt, on_token=on_token,
-                          _engine=self)
+                          deadline=deadline, _engine=self)
+        self._inflight[rid] = h
         self._queue.append(h)
         return h
 
@@ -202,23 +319,35 @@ class ServingEngine:
         scfg = self.scfg
         sync = scfg.temperature > 0.0
         depth = 0 if sync else max(0, scfg.pipeline_depth)
+        self._expire_queued()
         self._admit()
         live = {i: h for i, h in enumerate(self._slots) if h is not None}
         if not live:
             while self._pending:
                 self._harvest_one()
             return 0
-        if sync:
-            logits, self._states = self._step_logits(
-                self.params, self._states, self._tokens)
-            self._pending.append((logits, live))
-        else:
-            # pipelined: the sampled tokens stay on device and feed the next
-            # dispatch; the host looks at them `pipeline_depth` steps later
-            next_tok, self._states = self._step_greedy(
-                self.params, self._states, self._tokens)
-            self._tokens = next_tok
-            self._pending.append((next_tok, live))
+        try:
+            if self.fault_plan is not None:
+                self.fault_plan.maybe_raise("serve.step")
+            if sync:
+                logits, self._states = self._step_logits(
+                    self.params, self._states, self._tokens)
+                self._pending.append((logits, live))
+            else:
+                # pipelined: the sampled tokens stay on device and feed the
+                # next dispatch; the host looks at them `pipeline_depth`
+                # steps later
+                next_tok, self._states = self._step_greedy(
+                    self.params, self._states, self._tokens)
+                self._tokens = next_tok
+                self._pending.append((next_tok, live))
+        except Exception as e:  # noqa: BLE001 — batch-level dispatch failure
+            # the whole dispatched step is lost: fail the requests that
+            # occupied slots, recycle them, and keep the engine serviceable
+            # for the queue and for future submissions
+            for i, h in live.items():
+                self._fail(h, e, slot=i)
+            return self.step() if self._queue or self._pending else 0
         # block on overdue steps: at most `depth` stay in flight (0 = the
         # host sees every step's result before dispatching the next)
         while len(self._pending) > depth:
@@ -226,12 +355,26 @@ class ServingEngine:
         return len(live)
 
     def drain(self) -> dict[int, list[int]]:
-        """Run until the queue and every slot are empty; returns
-        ``rid -> generated tokens`` for every request finished so far."""
+        """Run until the queue and every slot are empty, then shut the
+        engine down; returns ``rid -> generated tokens`` for every request
+        that COMPLETED (failed / timed-out / cancelled requests carry their
+        outcome on their handle)."""
         while self._queue or self._pending or any(
                 h is not None for h in self._slots):
             self.step()
+        self._closed = True
         return self.results
+
+    def shutdown(self) -> None:
+        """Close the engine without draining: queued requests are cancelled,
+        running ones keep their partial tokens and transition to CANCELLED;
+        later ``submit`` calls raise."""
+        for h in list(self._queue) + [h for h in self._slots if h is not None]:
+            if not h.done:
+                self._cancel(h)
+        while self._pending:  # sync the device so nothing dangles
+            self._harvest_one()
+        self._closed = True
 
     def run(self) -> dict[int, list[int]]:
         """Deprecated: drain the queue; returns rid -> generated tokens.
@@ -246,6 +389,29 @@ class ServingEngine:
             "ServingEngine.run() is deprecated; use submit()/step()/drain() "
             "or RequestHandle.result()", DeprecationWarning, stacklevel=2)
         return self.drain()
+
+    def compile_resilient(self, program,
+                          backends: tuple[str, ...] = ("pallas", "xla")):
+        """Hot-swap guardrail: compile (and validate) a tuned canonical
+        program for this engine, degrading across ``backends`` in order.
+
+        A background ``evolve_recipe`` winner must never be swapped into a
+        live engine on the strength of a compile that hasn't run: each rung
+        builds through ``Daisy`` (whose recipe degradation maps Pallas kinds
+        onto XLA equivalents under ``'xla'``) and executes once on random
+        inputs before being accepted.  Falls through to the next backend on
+        any failure; degradations are recorded on ``self.degradations``.
+        Returns a :class:`repro.fault.DegradedCompile`.
+        """
+        from ..fault import compile_with_degradation
+
+        res = compile_with_degradation(
+            program, backends=backends, db=self.tuning_db,
+            fault_plan=self.fault_plan)
+        for b, _err in res.errors:
+            self.degradations.append(
+                (getattr(program, "name", "?"), b, res.backend))
+        return res
 
     def explain_kernels(self) -> str:
         """Pass-pipeline + contraction-plan report for this engine's config
@@ -291,25 +457,82 @@ class ServingEngine:
         state["len"] = jnp.asarray(s, jnp.int32)
         return logits[0, s - 1], state
 
-    def _sample_host(self, logits) -> int:
-        lf = np.asarray(logits, np.float32)
+    def _sample_from(self, lf: np.ndarray) -> int:
         if self.scfg.temperature <= 0.0:
             return int(lf.argmax())
         p = np.exp((lf - lf.max()) / self.scfg.temperature)
         p /= p.sum()
         return int(self.rng.choice(len(p), p=p))
 
-    def _finish(self, h: RequestHandle) -> None:
+    def _check_finite(self, lf: np.ndarray, h: RequestHandle) -> None:
+        if not np.isfinite(lf).all():
+            raise NonFiniteLogits(
+                f"request {h.rid}: non-finite logits "
+                f"(nan={int(np.isnan(lf).sum())}, inf={int(np.isinf(lf).sum())} "
+                f"of {lf.size})")
+
+    # -- terminal transitions -------------------------------------------------
+    def _retire(self, h: RequestHandle, slot: int | None = None) -> None:
+        self._inflight.pop(h.rid, None)
+        if slot is not None and self._slots[slot] is h:
+            self._slots[slot] = None
+
+    def _finish(self, h: RequestHandle, slot: int | None = None) -> None:
         self.results[h.rid] = h.tokens
+        self._retire(h, slot)
+
+    def _fail(self, h: RequestHandle, err: BaseException,
+              slot: int | None = None) -> None:
+        h.state = RequestState.FAILED
+        h.error = err
+        self.failed[h.rid] = h
+        self._retire(h, slot)
+
+    def _timeout(self, h: RequestHandle, slot: int | None = None) -> None:
+        h.state = RequestState.TIMED_OUT
+        self._retire(h, slot)
+
+    def _cancel(self, h: RequestHandle) -> None:
+        h.state = RequestState.CANCELLED
+        try:
+            self._queue.remove(h)
+        except ValueError:
+            pass
+        slot = next((i for i, s in enumerate(self._slots) if s is h), None)
+        self._retire(h, slot)
+
+    def _expire_queued(self) -> None:
+        """TIMED_OUT sweep over requests still waiting for a slot (their
+        deadline can pass while every slot is busy)."""
+        now = time.monotonic()
+        for h in [h for h in self._queue if h._overdue(now)]:
+            self._queue.remove(h)
+            self._timeout(h)
 
     def _admit(self) -> None:
         """Fill free slots from the queue: bucketed prefill, sample the
-        first token, write the slot state."""
+        first token, write the slot state.  A request whose prefill raises
+        or whose prefill logits are non-finite fails alone — admission
+        continues with the rest of the queue."""
         while self._queue and None in self._slots:
             h = self._queue.popleft()
-            last_logits, state = self._prefill(h)
-            t0 = self._sample_host(last_logits)
-            h._append(t0, self.scfg)
+            if h._overdue(time.monotonic()):
+                self._timeout(h)
+                continue
+            try:
+                fault = None if self.fault_plan is None else \
+                    self.fault_plan.maybe_raise("serve.prefill", key=h.rid)
+                last_logits, state = self._prefill(h)
+                lf = np.asarray(last_logits, np.float32)
+                if fault is not None and fault.kind == "nan":
+                    lf = np.full_like(lf, np.nan)
+                self._check_finite(lf, h)
+                t0 = self._sample_from(lf)
+                h.state = RequestState.RUNNING
+                h._append(t0, self.scfg)
+            except Exception as e:  # noqa: BLE001 — request-scoped isolation
+                self._fail(h, e)
+                continue
             if h.done:  # eos / max_new_tokens == 1: never occupies a slot
                 self._finish(h)
                 continue
@@ -321,19 +544,38 @@ class ServingEngine:
     def _harvest_one(self) -> None:
         """Materialize the oldest in-flight step's tokens and credit them to
         the handles that occupied each slot at dispatch time.  This is the
-        only point the host blocks on the device."""
+        only point the host blocks on the device — and the point where
+        per-request outcomes are decided: deadlines expire here, injected or
+        raised per-request work fails here, and a failed/overdue request
+        frees its slot while every other slot's tokens are credited
+        untouched."""
         out, live = self._pending.popleft()
         arr = np.asarray(out)  # blocks until this step's results are ready
+        now = time.monotonic()
         for i, h in live.items():
             if h.done:  # finished in a younger harvest; overshoot dropped
                 continue
-            if arr.ndim == 1:  # greedy path: sampled tokens (N,)
-                tok = int(arr[i])
-            else:  # sync path: logits (N, V), sample on host
-                tok = self._sample_host(arr[i])
-                self._tokens = self._tokens.at[i].set(tok)
-            h._append(tok, self.scfg)
+            if h._overdue(now):
+                self._timeout(h, slot=i)
+                continue
+            try:
+                fault = None if self.fault_plan is None else \
+                    self.fault_plan.maybe_raise("serve.decode", key=h.rid)
+                if arr.ndim == 1:  # greedy path: sampled tokens (N,)
+                    tok = int(arr[i])
+                else:  # sync path: logits (N, V), sample on host
+                    lf = arr[i]
+                    lfault = self.fault_plan.maybe_raise(
+                        "serve.logits", key=h.rid) if self.fault_plan else None
+                    if (fault is not None and fault.kind == "nan") or (
+                            lfault is not None and lfault.kind == "nan"):
+                        lf = np.full_like(lf, np.nan)
+                    self._check_finite(lf, h)
+                    tok = self._sample_from(lf)
+                    self._tokens = self._tokens.at[i].set(tok)
+                h._append(tok, self.scfg)
+            except Exception as e:  # noqa: BLE001 — request-scoped isolation
+                self._fail(h, e, slot=i)
+                continue
             if h.done:
-                self._finish(h)
-                if self._slots[i] is h:
-                    self._slots[i] = None
+                self._finish(h, slot=i)

@@ -15,13 +15,35 @@ Re-running against an existing ``--out`` composes: the file is loaded
 first, already-tuned fingerprints are skipped, and new results merge in
 (per fingerprint the better-measured recipe wins).  The written file is
 what ``Daisy.pretuned(backend=...)`` loads at deployment time.
+
+The pool is supervised (a long tuning run must survive its own workers):
+
+  * every completed nest is **checkpointed** into ``--out`` as it lands, so
+    a crashed run loses nothing already measured and a re-run resumes from
+    the crash point (the normal skip-tuned-fingerprints resume path);
+  * a worker death (``BrokenProcessPool``) or a stall (no completion within
+    ``--task-timeout``) kills the pool, salvages the finished results, and
+    retries the started-but-unfinished tasks with bounded backoff
+    (``RestartPolicy``); tasks the dead pool never started are requeued
+    free of charge (started-marker files in a scratch dir tell them apart);
+  * a nest that keeps killing workers is **quarantined** by fingerprint —
+    recorded under ``meta["quarantined"]`` in the database and skipped by
+    future runs until ``--retry-quarantined``.
+
+Deterministic fault injection: a ``fault.FaultPlan`` with site
+``tune.worker`` (key = nest fingerprint) makes the matching worker crash
+(``os._exit``), hang, or raise — how the supervision above is tested.
 """
 from __future__ import annotations
 
 import argparse
+import hashlib
 import os
+import tempfile
 import time
+from collections import deque
 from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
+from concurrent.futures.process import BrokenProcessPool
 from multiprocessing import get_context
 from pathlib import Path
 
@@ -30,6 +52,7 @@ import numpy as np
 from ..core import Daisy, Program, TuningDatabase, fingerprint
 from ..core.database import pretuned_dir
 from ..core.recipes import Recipe
+from ..fault import FaultInjected, FaultPlan, RestartPolicy
 
 SUITES = ("polybench", "cloudsc", "all")
 BACKENDS = ("xla", "pallas_interpret", "pallas")
@@ -69,6 +92,11 @@ def build_program(source: str, name: str, size: str) -> Program:
     return mini_cloudsc_program(nproma=nproma, klev=klev)
 
 
+def _task_key(fp: str) -> str:
+    """Filesystem-safe id for a nest fingerprint (started-marker filename)."""
+    return hashlib.md5(fp.encode()).hexdigest()
+
+
 def _tune_nest(task: dict) -> dict:
     """Process-pool worker: epoch-1 search for one canonical nest.
 
@@ -76,6 +104,20 @@ def _tune_nest(task: dict) -> dict:
     deterministic, so ``nest_index`` addresses the same canonical nest the
     parent enumerated (the fingerprint check below enforces it).
     """
+    scratch = task.get("scratch")
+    if scratch:
+        # started marker: if this worker dies, the supervisor can tell the
+        # tasks that were actually running from the ones the pool never got
+        # to (only the former are charged a retry attempt)
+        (Path(scratch) / _task_key(task["fingerprint"])).touch()
+    fault = task.get("fault")  # injected by the parent's FaultPlan
+    if fault == "crash":
+        os._exit(3)  # hard kill, like a segfaulting kernel build
+    if fault == "hang":
+        time.sleep(float(task.get("hang_s", 3600.0)))
+    if fault == "error":
+        raise FaultInjected(
+            f"injected worker error for {task['name']} nest {task['nest_index']}")
     prog = build_program(task["source"], task["name"], task["size"])
     d = Daisy(backend=task["backend"])
     p = d._normalized(prog)
@@ -94,34 +136,170 @@ def _tune_nest(task: dict) -> dict:
             "recipe": recipe.to_json(), "measured_us": t, "provenance": prov}
 
 
-def _run_tasks(tasks: list[dict], jobs: int, verbose: bool) -> list[dict]:
-    if jobs <= 1 or len(tasks) <= 1:
-        out = []
-        for i, t in enumerate(tasks):
-            r = _tune_nest(t)
+class _PoolStall(RuntimeError):
+    """No task completed within the progress timeout — workers presumed hung."""
+
+
+def _run_tasks(
+    tasks: list[dict],
+    jobs: int,
+    verbose: bool,
+    on_result=None,
+    task_timeout_s: float | None = None,
+    max_task_retries: int = 1,
+    retry_backoff_s: float = 0.0,
+    fault_plan: FaultPlan | None = None,
+) -> tuple[list[dict], dict[str, str]]:
+    """Run the epoch-1 searches under supervision.
+
+    Returns ``(results, quarantined)`` where ``quarantined`` maps nest
+    fingerprints that exhausted their retries to a reason string.
+    ``on_result(task, result)`` fires as each nest lands (checkpoint hook).
+    """
+    results: list[dict] = []
+    quarantined: dict[str, str] = {}
+    policies: dict[str, RestartPolicy] = {}
+
+    def policy(fp: str) -> RestartPolicy:
+        return policies.setdefault(fp, RestartPolicy(
+            max_restarts=max_task_retries, backoff_s=retry_backoff_s))
+
+    def emit(t: dict, r: dict) -> None:
+        results.append(r)
+        if on_result is not None:
+            on_result(t, r)
+        if verbose:
+            print(f"  [{len(results)}/{len(tasks)}] {t['name']} "
+                  f"nest {t['nest_index']} -> {r['recipe']['kind']} "
+                  f"({r['measured_us']:.0f}us)", flush=True)
+
+    def charge(t: dict, exc: BaseException) -> bool:
+        """One failed attempt: True -> retry, False -> quarantined."""
+        fp = t["fingerprint"]
+        if policy(fp).should_restart(exc):
             if verbose:
-                print(f"  [{i + 1}/{len(tasks)}] {t['name']} nest {t['nest_index']}"
-                      f" -> {r['recipe']['kind']} ({r['measured_us']:.0f}us)")
-            out.append(r)
-        return out
+                print(f"  retry {t['name']} nest {t['nest_index']} "
+                      f"(attempt {policies[fp].restarts + 1}): {exc}", flush=True)
+            return True
+        quarantined[fp] = (f"{t['name']} nest {t['nest_index']}: {exc} "
+                           f"(after {policies[fp].restarts} attempt(s))")
+        if verbose:
+            print(f"  QUARANTINED {t['name']} nest {t['nest_index']}: {exc}",
+                  flush=True)
+        return False
+
+    def consult(t: dict) -> dict:
+        """Parent-side fault-plan consult: embed a picklable fault kind
+        (dropping any stale kind from a previous attempt — a consumed fault
+        must not replay on the retry)."""
+        t = {k: v for k, v in t.items() if k != "fault"}
+        if fault_plan is None:
+            return t
+        f = fault_plan.fire("tune.worker", key=t["fingerprint"])
+        if f is not None:
+            t["fault"] = f.kind
+        return t
+
+    if jobs <= 1 or len(tasks) <= 1:
+        # in-process path: worker-kill faults cannot be executed literally
+        # (they would kill the run itself) — every injected kind raises and
+        # goes through the same retry/quarantine accounting
+        queue = deque(tasks)
+        while queue:
+            t = consult(queue.popleft())
+            try:
+                if t.get("fault"):
+                    raise FaultInjected(
+                        f"injected {t['fault']} for {t['name']} "
+                        f"nest {t['nest_index']}")
+                r = _tune_nest(t)
+            except Exception as e:  # noqa: BLE001 — supervised retry
+                if charge(t, e):
+                    queue.append(t)
+                continue
+            emit(t, r)
+        return results, quarantined
+
     # spawn, not fork: workers must initialize their own JAX runtime rather
     # than inherit the parent's (forked XLA thread pools deadlock)
     ctx = get_context("spawn")
-    results: list[dict] = []
-    with ProcessPoolExecutor(max_workers=jobs, mp_context=ctx) as ex:
-        futs = {ex.submit(_tune_nest, t): t for t in tasks}
-        pending = set(futs)
-        while pending:
-            done, pending = wait(pending, return_when=FIRST_COMPLETED)
-            for f in done:
-                t = futs[f]
-                r = f.result()
+    remaining = list(tasks)
+    # a pool-wide breakage cannot name its culprit: every started task in
+    # the round is a suspect.  Suspects re-run SOLO (one per round) so the
+    # next crash charges exactly the poison nest and co-started innocents
+    # succeed instead of being quarantined by association.
+    suspects: deque[dict] = deque()
+    with tempfile.TemporaryDirectory(prefix="repro-tune-") as scratch:
+        while remaining or suspects:
+            if suspects:
+                src = [suspects.popleft()]
+            else:
+                src, remaining = remaining, []
+            round_tasks = []
+            for t in src:
+                t = consult(dict(t, scratch=scratch))
+                (Path(scratch) / _task_key(t["fingerprint"])).unlink(missing_ok=True)
+                round_tasks.append(t)
+            lost: list[dict] = []
+            broken: BaseException | None = None
+            ex = ProcessPoolExecutor(max_workers=min(jobs, len(round_tasks)),
+                                     mp_context=ctx)
+            futs = {ex.submit(_tune_nest, t): t for t in round_tasks}
+            pending = set(futs)
+            try:
+                while pending:
+                    done, pending = wait(pending, timeout=task_timeout_s,
+                                         return_when=FIRST_COMPLETED)
+                    if not done:
+                        raise _PoolStall(
+                            f"no task completed within {task_timeout_s}s — "
+                            f"killing {len(pending)} in-flight worker(s)")
+                    for f in done:
+                        t = futs[f]
+                        try:
+                            r = f.result()
+                        except BrokenProcessPool as e:
+                            broken = e
+                            lost.append(t)
+                            continue
+                        except Exception as e:  # noqa: BLE001 — worker raised
+                            if charge(t, e):
+                                remaining.append(t)
+                            continue
+                        emit(t, r)
+                    if broken is not None:
+                        raise broken
+            except (BrokenProcessPool, _PoolStall) as e:
+                broken = e
+                lost.extend(futs[f] for f in pending)
+                # hung/orphaned workers never exit on their own — kill them
+                # so shutdown does not block behind a sleeping process
+                for p in list(getattr(ex, "_processes", {}).values()):
+                    try:
+                        p.terminate()
+                    except Exception:  # noqa: BLE001
+                        pass
+                ex.shutdown(wait=False, cancel_futures=True)
+            else:
+                ex.shutdown()
+            if broken is not None:
+                started = [t for t in lost
+                           if (Path(scratch) / _task_key(t["fingerprint"])).exists()]
+                never_started = [t for t in lost if t not in started]
+                if not started:
+                    # nothing even began before the pool died: the pool
+                    # itself is the problem, not a poison task — charge
+                    # everyone so a permanently-broken pool still terminates
+                    started, never_started = never_started, []
+                for t in started:
+                    if charge(t, broken):
+                        suspects.append(t)
+                remaining.extend(never_started)
                 if verbose:
-                    print(f"  [{len(results) + 1}/{len(tasks)}] {t['name']} "
-                          f"nest {t['nest_index']} -> {r['recipe']['kind']} "
-                          f"({r['measured_us']:.0f}us)", flush=True)
-                results.append(r)
-    return results
+                    print(f"  pool lost ({broken}); salvaged {len(results)} "
+                          f"result(s), {len(suspects)} suspect(s) to isolate, "
+                          f"{len(remaining)} task(s) requeued", flush=True)
+    return results, quarantined
 
 
 def tune(
@@ -137,11 +315,19 @@ def tune(
     search: bool = True,
     transfer: bool = True,
     verbose: bool = True,
+    task_timeout_s: float | None = None,
+    max_task_retries: int = 1,
+    retry_quarantined: bool = False,
+    checkpoint: bool = True,
+    fault_plan: FaultPlan | None = None,
 ) -> tuple[TuningDatabase, Path]:
     """Tune the suite and persist/merge the database at ``out``."""
     out = Path(out) if out is not None else pretuned_dir() / f"pretuned_{backend}.json"
     db = TuningDatabase.load(out) if out.exists() else TuningDatabase()
     before = len(db.entries)
+    if retry_quarantined:
+        db.meta.pop("quarantined", None)
+    quarantine_meta: dict = db.meta.get("quarantined", {})
 
     # enumerate distinct canonical nests (normalization is pure IR work —
     # no JAX computation runs in the parent before the pool spins up)
@@ -150,6 +336,7 @@ def tune(
     progs: list[Program] = []
     tasks: list[dict] = []
     seen: set[str] = set()
+    skipped_quarantined = 0
     for source, name in specs:
         prog = build_program(source, name, size)
         progs.append(prog)
@@ -158,6 +345,9 @@ def tune(
             fp = fingerprint(nest)
             if fp in seen or db.lookup_exact(fp) is not None:
                 continue
+            if fp in quarantine_meta:
+                skipped_quarantined += 1
+                continue
             seen.add(fp)
             tasks.append({
                 "source": source, "name": name, "size": size, "nest_index": i,
@@ -165,29 +355,54 @@ def tune(
                 "population": population, "repeats": repeats, "fingerprint": fp,
             })
     if verbose:
+        quar = (f", {skipped_quarantined} quarantined"
+                if skipped_quarantined else "")
         print(f"tuning {len(tasks)} nests ({len(specs)} programs, suite={suite}, "
               f"size={size}, backend={backend}, jobs={jobs}, "
-              f"{before} entries already tuned)")
+              f"{before} entries already tuned{quar})")
 
-    # epoch 1, fanned across the pool
-    t0 = time.perf_counter()
-    for r in _run_tasks(tasks, jobs, verbose):
+    out.parent.mkdir(parents=True, exist_ok=True)
+
+    def accept(r: dict) -> bool:
         if not np.isfinite(r["measured_us"]):
             # every candidate lowering failed for this nest: ship no entry
             # (plan() falls back to the default recipe) rather than an
             # unvalidated recipe with an inf measurement
             print(f"  WARNING: no measurable lowering for {r['provenance']} "
                   f"({r['fingerprint'][:50]}); skipped")
-            continue
+            return False
         db.add(r["fingerprint"], np.asarray(r["embedding"]),
                Recipe.from_json(r["recipe"]),
                provenance=r["provenance"], measured_us=r["measured_us"])
+        return True
+
+    def on_result(t: dict, r: dict) -> None:
+        if accept(r) and checkpoint:
+            # in-run checkpoint: a completed nest survives any later pool
+            # loss, and a re-run against --out resumes past it
+            db.save(out)
+
+    # epoch 1, fanned across the pool under supervision
+    t0 = time.perf_counter()
+    _, quarantined = _run_tasks(
+        tasks, jobs, verbose, on_result=on_result,
+        task_timeout_s=task_timeout_s, max_task_retries=max_task_retries,
+        fault_plan=fault_plan,
+    )
+    if quarantined:
+        q = db.meta.setdefault("quarantined", {})
+        for fp, reason in quarantined.items():
+            q[fp] = {"reason": reason,
+                     "at": time.strftime("%Y-%m-%dT%H:%M:%S")}
 
     # epochs 2-3 (cross-nest transfer) need the merged database: run in the
     # parent, restricted to this run's nests so incremental runs compose
+    # (quarantined nests excluded — a recipe that kills workers must not be
+    # re-run in the parent process)
     if transfer and search and tasks:
         d = Daisy(db=db, backend=backend)
-        n = d.transfer_epoch(progs, fingerprints=seen, repeats=repeats)
+        n = d.transfer_epoch(progs, fingerprints=seen - set(quarantined),
+                             repeats=repeats)
         if verbose:
             print(f"transfer epoch re-seeded {n} nests")
 
@@ -200,9 +415,10 @@ def tune(
         "search_iterations": iterations, "population": population,
         "nests_tuned": len(tasks),
     }
+    if quarantined:
+        run_rec["nests_quarantined"] = len(quarantined)
     db.meta.update(run_rec)
     db.meta.setdefault("runs", []).append(run_rec)
-    out.parent.mkdir(parents=True, exist_ok=True)
     db.save(out)
     if verbose:
         s = db.summary()
@@ -237,6 +453,15 @@ def main(argv: list[str] | None = None) -> None:
                     help="analytic seeding only (idiom default recipes, measured)")
     ap.add_argument("--no-transfer", dest="transfer", action="store_false",
                     help="skip the cross-nest transfer epoch")
+    ap.add_argument("--task-timeout", type=float, default=None,
+                    help="progress timeout in seconds: if no nest completes "
+                         "within it, in-flight workers are presumed hung, "
+                         "killed and their tasks retried")
+    ap.add_argument("--max-task-retries", type=int, default=1,
+                    help="failed attempts per nest before it is quarantined")
+    ap.add_argument("--retry-quarantined", action="store_true",
+                    help="give nests recorded in meta['quarantined'] "
+                         "another chance instead of skipping them")
     args = ap.parse_args(argv)
     jobs = args.jobs if args.jobs is not None else min(4, os.cpu_count() or 1)
     tune(
@@ -244,6 +469,9 @@ def main(argv: list[str] | None = None) -> None:
         names=args.names.split(",") if args.names else None, jobs=jobs,
         iterations=args.iterations, population=args.population,
         repeats=args.repeats, search=args.search, transfer=args.transfer,
+        task_timeout_s=args.task_timeout,
+        max_task_retries=args.max_task_retries,
+        retry_quarantined=args.retry_quarantined,
     )
 
 

@@ -1,91 +1,12 @@
-"""Fault-tolerance scaffolding: heartbeats, straggler detection, restarts.
-
-On a 1000+ node cluster the failure model is: (a) hard node loss — detected
-by missed heartbeats, handled by restart-from-checkpoint on a re-formed mesh
-(elastic: the checkpoint is device-count agnostic); (b) stragglers — detected
-by per-step wall time exceeding a multiple of the EMA, handled by flagging
-the host for the scheduler (synchronous SPMD cannot proceed without it, so
-the mitigation is replacement, not work stealing); (c) numeric poison —
-NaN/inf gradients, handled *inside* the jitted step (see adamw_update: the
-step is skipped, not crashed).
-"""
-from __future__ import annotations
-
-import json
-import os
-import threading
-import time
-from dataclasses import dataclass, field
-from pathlib import Path
-
-
-class Heartbeat:
-    """Background thread stamping a file; a supervisor (or test) detects a
-    dead/stuck process by file age."""
-
-    def __init__(self, path: str | Path, interval: float = 1.0):
-        self.path = Path(path)
-        self.interval = interval
-        self._stop = threading.Event()
-        self._thread: threading.Thread | None = None
-
-    def start(self) -> None:
-        self._stop.clear()
-        self._thread = threading.Thread(target=self._run, daemon=True)
-        self._thread.start()
-
-    def _run(self) -> None:
-        while not self._stop.is_set():
-            self.path.write_text(json.dumps({"t": time.time(), "pid": os.getpid()}))
-            self._stop.wait(self.interval)
-
-    def stop(self) -> None:
-        self._stop.set()
-        if self._thread:
-            self._thread.join(timeout=2.0)
-
-    @staticmethod
-    def age(path: str | Path) -> float | None:
-        p = Path(path)
-        if not p.exists():
-            return None
-        try:
-            return time.time() - json.loads(p.read_text())["t"]
-        except Exception:
-            return None
-
-
-@dataclass
-class StragglerMonitor:
-    """EMA step-time tracker; flags steps slower than ``threshold`` x EMA."""
-
-    threshold: float = 3.0
-    alpha: float = 0.1
-    ema: float | None = None
-    flagged: list[tuple[int, float]] = field(default_factory=list)
-
-    def observe(self, step: int, dt: float) -> bool:
-        is_straggler = self.ema is not None and dt > self.threshold * self.ema
-        if is_straggler:
-            self.flagged.append((step, dt))
-        # don't fold outliers into the EMA
-        if not is_straggler:
-            self.ema = dt if self.ema is None else (1 - self.alpha) * self.ema + self.alpha * dt
-        return is_straggler
-
-
-@dataclass
-class RestartPolicy:
-    """Bounded retry-from-checkpoint loop (used by Trainer.run_resilient)."""
-
-    max_restarts: int = 3
-    backoff_s: float = 0.0
-    restarts: int = 0
-
-    def should_restart(self, exc: Exception) -> bool:
-        self.restarts += 1
-        if self.restarts > self.max_restarts:
-            return False
-        if self.backoff_s:
-            time.sleep(self.backoff_s * self.restarts)
-        return True
+"""Compatibility shim: the fault-tolerance scaffolding grew beyond the
+trainer (serving error isolation, tune-pool supervision, fault injection)
+and now lives in :mod:`repro.fault`.  Import from there; these re-exports
+keep the PR-6 import paths working."""
+from ..fault import (  # noqa: F401
+    Fault,
+    FaultInjected,
+    FaultPlan,
+    Heartbeat,
+    RestartPolicy,
+    StragglerMonitor,
+)

@@ -25,8 +25,8 @@ from ..data.pipeline import DataConfig, LMDataPipeline
 from ..models import model as M
 from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
 from ..optim.compression import compress_grads, decompress_grads
+from ..fault import Heartbeat, RestartPolicy, StragglerMonitor
 from .checkpoint import CheckpointManager
-from .fault import Heartbeat, RestartPolicy, StragglerMonitor
 
 
 def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
@@ -200,7 +200,14 @@ class Trainer:
             step, tree, _ = self.ckpt.restore(self._tree())
         except (KeyError, ValueError):
             return False  # incompatible checkpoint (e.g. config changed)
-        self.params, self.opt_state = tree["params"], tree["opt"]
+        # checkpoints restore as host arrays: re-place on the mesh with the
+        # same sharding specs the constructor used, or the first post-restore
+        # step would run unsharded (and donation would fail on a re-formed
+        # mesh with a different device count)
+        self.params = self._ctx.place(tree["params"])
+        self.opt_state = tree["opt"]
+        self.opt_state["m"] = self._ctx.place(self.opt_state["m"])
+        self.opt_state["v"] = self._ctx.place(self.opt_state["v"])
         self.step = step
         return True
 
@@ -253,6 +260,9 @@ class Trainer:
                 fail_at = None  # the injected failure happens once
                 restored = self.try_restore()
                 if not restored:  # no checkpoint yet: restart from scratch
-                    self.params = M.init_params(self.cfg, jax.random.PRNGKey(0))
+                    self.params = self._ctx.place(
+                        M.init_params(self.cfg, jax.random.PRNGKey(0)))
                     self.opt_state = adamw_init(self.params)
+                    self.opt_state["m"] = self._ctx.place(self.opt_state["m"])
+                    self.opt_state["v"] = self._ctx.place(self.opt_state["v"])
                     self.step = 0

@@ -1,0 +1,419 @@
+"""Fault-tolerance layer: seeded injection, request-scoped serving
+isolation, tune-pool supervision, durable databases, degradation chain."""
+import json
+import time
+from concurrent.futures import CancelledError
+
+import numpy as np
+import pytest
+import jax
+
+from repro.configs import get_config
+from repro.core import DatabaseCorruption, TuningDatabase
+from repro.core.recipes import Recipe
+from repro.fault import (
+    Fault,
+    FaultInjected,
+    FaultPlan,
+    Heartbeat,
+    compile_with_degradation,
+    truncate_file,
+)
+from repro.models import model as M
+from repro.serve import RequestState, ServeConfig, ServingEngine
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan
+# ---------------------------------------------------------------------------
+class TestFaultPlan:
+    def test_explicit_fault_fires_once(self):
+        plan = FaultPlan([Fault("site.a", "error", key=1)])
+        assert plan.fire("site.a", key=2) is None  # key mismatch
+        f = plan.fire("site.a", key=1)
+        assert f is not None and f.kind == "error"
+        assert plan.fire("site.a", key=1) is None  # times=1 burned out
+        assert plan.count("site.a") == 1
+
+    def test_times_budget(self):
+        plan = FaultPlan([Fault("s", "crash", times=2)])
+        assert plan.fire("s") is not None
+        assert plan.fire("s") is not None
+        assert plan.fire("s") is None
+
+    def test_unlimited_times(self):
+        plan = FaultPlan([Fault("s", times=-1)])
+        for _ in range(5):
+            assert plan.fire("s") is not None
+
+    def test_maybe_raise_error_kind(self):
+        plan = FaultPlan([Fault("s", "error")])
+        with pytest.raises(FaultInjected):
+            plan.maybe_raise("s")
+
+    def test_maybe_raise_returns_non_error(self):
+        plan = FaultPlan([Fault("s", "nan")])
+        f = plan.maybe_raise("s")
+        assert f is not None and f.kind == "nan"
+
+    def test_rate_based_is_seeded(self):
+        fires = []
+        for _ in range(2):
+            plan = FaultPlan(seed=7, rate=0.5, sites=("s",))
+            fires.append([plan.fire("s", key=i) is not None for i in range(20)])
+        assert fires[0] == fires[1]  # same seed -> same schedule
+        assert any(fires[0]) and not all(fires[0])
+
+    def test_plan_does_not_mutate_caller_faults(self):
+        f = Fault("s", times=1)
+        plan = FaultPlan([f])
+        plan.fire("s")
+        assert f.times == 1  # the plan owns a copy
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat atomic stamps
+# ---------------------------------------------------------------------------
+class TestHeartbeatAtomic:
+    def test_stamp_is_atomic_and_parseable(self, tmp_path):
+        hb = Heartbeat(tmp_path / "hb.json", interval=0.02)
+        hb.start()
+        deadline = time.time() + 0.5
+        seen = 0
+        while time.time() < deadline:
+            # concurrent reader: an atomic writer never exposes a partial file
+            if not (tmp_path / "hb.json").exists():
+                continue
+            json.loads((tmp_path / "hb.json").read_text())  # must always parse
+            age = Heartbeat.age(tmp_path / "hb.json")
+            assert age is not None and age < 60.0
+            seen += 1
+        hb.stop()
+        assert seen > 0
+        assert not list(tmp_path.glob(".hb.json.*.tmp"))  # no tmp debris
+
+
+# ---------------------------------------------------------------------------
+# TuningDatabase durability
+# ---------------------------------------------------------------------------
+def _mini_db() -> TuningDatabase:
+    db = TuningDatabase()
+    db.add("fp-a", np.zeros(4), Recipe(kind="einsum"), measured_us=2.0)
+    db.add("fp-b", np.ones(4), Recipe(kind="vectorize"), measured_us=3.0)
+    return db
+
+
+class TestDatabaseDurability:
+    def test_save_writes_checksum_and_bak(self, tmp_path):
+        p = tmp_path / "db.json"
+        _mini_db().save(p)
+        raw = json.loads(p.read_text())
+        assert raw["version"] == 2 and "checksum" in raw
+        assert (tmp_path / "db.json.bak").exists()
+        assert not list(tmp_path.glob(".db.json.*.tmp"))
+
+    def test_truncated_primary_recovers_from_bak(self, tmp_path):
+        p = tmp_path / "db.json"
+        _mini_db().save(p)
+        truncate_file(p, 0.4)  # the torn write a crash leaves behind
+        db = TuningDatabase.load(p)
+        assert len(db.entries) == 2
+
+    def test_checksum_detects_silent_tamper(self, tmp_path):
+        p = tmp_path / "db.json"
+        _mini_db().save(p)
+        p.write_text(p.read_text().replace('"measured_us": 2.0',
+                                           '"measured_us": 99.0'))
+        db = TuningDatabase.load(p)  # valid JSON, bad checksum -> .bak
+        assert db.entries[0].measured_us == 2.0
+
+    def test_both_corrupt_raises(self, tmp_path):
+        p = tmp_path / "db.json"
+        _mini_db().save(p)
+        truncate_file(p, 0.3)
+        truncate_file(tmp_path / "db.json.bak", 0.3)
+        with pytest.raises(DatabaseCorruption):
+            TuningDatabase.load(p)
+
+    def test_corrupt_without_bak_raises(self, tmp_path):
+        p = tmp_path / "db.json"
+        p.write_text("{not json")
+        with pytest.raises(DatabaseCorruption):
+            TuningDatabase.load(p)
+
+    def test_newer_version_is_not_corruption(self, tmp_path):
+        p = tmp_path / "db.json"
+        _mini_db().save(p)
+        raw = json.loads(p.read_text())
+        raw["version"] = 99
+        raw["checksum"] = TuningDatabase._checksum(raw)
+        p.write_text(json.dumps(raw))
+        with pytest.raises(ValueError, match="newer than supported"):
+            TuningDatabase.load(p)
+
+    def test_legacy_file_without_checksum_loads(self, tmp_path):
+        p = tmp_path / "db.json"
+        _mini_db().save(p)
+        raw = json.loads(p.read_text())
+        del raw["checksum"]
+        p.write_text(json.dumps(raw))
+        (tmp_path / "db.json.bak").unlink()
+        assert len(TuningDatabase.load(p).entries) == 2
+
+
+# ---------------------------------------------------------------------------
+# backend degradation chain
+# ---------------------------------------------------------------------------
+class TestDegradation:
+    def _prog(self):
+        from repro.tools.tune import build_program
+
+        return build_program("polybench", "gemm", "mini")
+
+    def test_first_rung_wins_when_healthy(self):
+        res = compile_with_degradation(self._prog(),
+                                       backends=("pallas_interpret", "xla"))
+        assert res.backend == "pallas_interpret" and not res.degraded
+
+    def test_injected_failure_degrades_to_xla(self):
+        plan = FaultPlan([Fault("daisy.compile", "error",
+                                key="pallas_interpret")])
+        res = compile_with_degradation(self._prog(),
+                                       backends=("pallas_interpret", "xla"),
+                                       fault_plan=plan)
+        assert res.degraded and res.backend == "xla"
+        assert [b for b, _ in res.errors] == ["pallas_interpret"]
+
+    def test_all_rungs_fail_raises_first_error(self):
+        plan = FaultPlan([Fault("daisy.compile", "error", key="pallas_interpret"),
+                          Fault("daisy.compile", "error", key="xla")])
+        with pytest.raises(RuntimeError, match="all backends failed"):
+            compile_with_degradation(self._prog(),
+                                     backends=("pallas_interpret", "xla"),
+                                     fault_plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# serving: request-scoped isolation
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def serve_setup():
+    cfg = get_config("minicpm-2b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    scfg = ServeConfig(batch_slots=2, max_len=96, max_new_tokens=6)
+    prompts = {i: (np.arange(1, 5 + i) % cfg.vocab).astype(np.int32)
+               for i in range(4)}
+    eng = ServingEngine(cfg, params, scfg)
+    for i, p in prompts.items():
+        eng.submit(p, rid=i)
+    reference = dict(eng.drain())
+    return cfg, params, scfg, prompts, reference
+
+
+class TestServingIsolation:
+    def test_survivors_are_token_identical(self, serve_setup):
+        cfg, params, scfg, prompts, ref = serve_setup
+        plan = FaultPlan([Fault("serve.decode", "error", key=1),
+                          Fault("serve.prefill", "nan", key=2)])
+        eng = ServingEngine(cfg, params, scfg, fault_plan=plan)
+        hs = {i: eng.submit(p, rid=i) for i, p in prompts.items()}
+        res = eng.drain()
+        for i in (1, 2):
+            assert hs[i].state is RequestState.FAILED
+            assert i not in res and i in eng.failed
+        for i in (0, 3):  # untouched requests: bit-exact vs fault-free
+            assert hs[i].state is RequestState.COMPLETED
+            assert res[i] == ref[i]
+        assert plan.count() == 2
+
+    def test_failed_handle_raises_captured_error(self, serve_setup):
+        cfg, params, scfg, prompts, _ = serve_setup
+        plan = FaultPlan([Fault("serve.decode", "error", key=0)])
+        eng = ServingEngine(cfg, params, scfg, fault_plan=plan)
+        h = eng.submit(prompts[0], rid=0)
+        eng.drain()
+        assert h.error is not None
+        with pytest.raises(FaultInjected):
+            h.result()
+
+    def test_nan_prefill_fails_only_that_request(self, serve_setup):
+        cfg, params, scfg, prompts, ref = serve_setup
+        plan = FaultPlan([Fault("serve.prefill", "nan", key=0)])
+        eng = ServingEngine(cfg, params, scfg, fault_plan=plan)
+        h0 = eng.submit(prompts[0], rid=0)
+        h1 = eng.submit(prompts[1], rid=1)
+        res = eng.drain()
+        assert h0.state is RequestState.FAILED
+        assert "non-finite" in str(h0.error)
+        assert res[1] == ref[1]
+
+    def test_step_level_failure_keeps_engine_usable(self, serve_setup):
+        cfg, params, scfg, prompts, ref = serve_setup
+        plan = FaultPlan([Fault("serve.step", "error")])
+        eng = ServingEngine(cfg, params, scfg, fault_plan=plan)
+        ha = eng.submit(prompts[0], rid=0)
+        hb = eng.submit(prompts[3], rid=3)
+        # queued beyond the 2 slots: decodes after the batch failure
+        hc = eng.submit(prompts[1], rid=10)
+        res = eng.drain()
+        assert ha.state is RequestState.FAILED
+        assert hb.state is RequestState.FAILED
+        assert hc.state is RequestState.COMPLETED and res[10] == ref[1]
+
+    def test_timeout_while_queued(self, serve_setup):
+        cfg, params, scfg, prompts, _ = serve_setup
+        eng = ServingEngine(cfg, params, scfg)
+        h = eng.submit(prompts[0], timeout_s=-1.0)  # already overdue
+        eng.step()
+        assert h.state is RequestState.TIMED_OUT
+        with pytest.raises(TimeoutError):
+            h.result()
+        eng.drain()
+
+    def test_timeout_mid_decode_frees_slot(self, serve_setup):
+        cfg, params, scfg, prompts, _ = serve_setup
+        eng = ServingEngine(cfg, params, scfg)
+        h = eng.submit(prompts[0], rid=0, timeout_s=0.05)
+        eng.step()  # admitted + first decode dispatched
+        time.sleep(0.1)
+        eng.drain()
+        assert h.state is RequestState.TIMED_OUT
+        assert all(s is None for s in eng._slots)
+
+    def test_cancel_queued_and_running(self, serve_setup):
+        cfg, params, scfg, prompts, ref = serve_setup
+        eng = ServingEngine(cfg, params, scfg)
+        hq = eng.submit(prompts[0], rid=0)
+        assert hq.cancel() is True
+        assert hq.state is RequestState.CANCELLED
+        assert hq.cancel() is False  # already terminal
+        hr = eng.submit(prompts[1], rid=1)
+        eng.step()
+        assert hr.state is RequestState.RUNNING
+        assert hr.cancel() is True
+        res = eng.drain()
+        assert hr.state is RequestState.CANCELLED and 1 not in res
+        with pytest.raises(CancelledError):
+            hr.result()
+
+    def test_duplicate_inflight_rid_rejected(self, serve_setup):
+        cfg, params, scfg, prompts, _ = serve_setup
+        eng = ServingEngine(cfg, params, scfg)
+        eng.submit(prompts[0], rid=5)
+        with pytest.raises(ValueError, match="already in flight"):
+            eng.submit(prompts[1], rid=5)
+        eng.drain()
+
+    def test_submit_after_drain_rejected(self, serve_setup):
+        cfg, params, scfg, prompts, _ = serve_setup
+        eng = ServingEngine(cfg, params, scfg)
+        eng.submit(prompts[0])
+        eng.drain()
+        with pytest.raises(RuntimeError, match="shut down"):
+            eng.submit(prompts[1])
+
+    def test_shutdown_cancels_and_closes(self, serve_setup):
+        cfg, params, scfg, prompts, _ = serve_setup
+        eng = ServingEngine(cfg, params, scfg)
+        h = eng.submit(prompts[0])
+        eng.shutdown()
+        assert h.state is RequestState.CANCELLED
+        with pytest.raises(RuntimeError, match="shut down"):
+            eng.submit(prompts[1])
+
+    def test_compile_resilient_records_degradation(self, serve_setup):
+        cfg, params, scfg, _, _ = serve_setup
+        from repro.tools.tune import build_program
+
+        plan = FaultPlan([Fault("daisy.compile", "error",
+                                key="pallas_interpret")])
+        eng = ServingEngine(cfg, params, scfg, fault_plan=plan)
+        res = eng.compile_resilient(build_program("polybench", "gemm", "mini"),
+                                    backends=("pallas_interpret", "xla"))
+        assert res.backend == "xla"
+        assert eng.degradations and eng.degradations[0][2] == "xla"
+
+
+# ---------------------------------------------------------------------------
+# tune pool supervision (inline path; the spawn-pool path is tested under
+# the slow marker below)
+# ---------------------------------------------------------------------------
+class TestTuneSupervisionInline:
+    def _tune(self, tmp_path, **kw):
+        from repro.tools.tune import tune
+
+        kw.setdefault("suite", "polybench")
+        kw.setdefault("names", ["gemm"])
+        kw.setdefault("size", "mini")
+        kw.setdefault("jobs", 1)
+        kw.setdefault("iterations", 1)
+        kw.setdefault("population", 2)
+        kw.setdefault("repeats", 1)
+        kw.setdefault("verbose", False)
+        kw.setdefault("out", tmp_path / "db.json")
+        return tune(**kw)
+
+    def _fingerprints(self, tmp_path):
+        db, _ = self._tune(tmp_path, out=tmp_path / "ref.json")
+        return [e.fingerprint for e in db.entries]
+
+    def test_transient_error_is_retried_to_success(self, tmp_path):
+        fps = self._fingerprints(tmp_path)
+        plan = FaultPlan([Fault("tune.worker", "error", key=fps[0], times=1)])
+        db, _ = self._tune(tmp_path, fault_plan=plan, max_task_retries=1)
+        assert db.lookup_exact(fps[0]) is not None
+        assert "quarantined" not in db.meta
+
+    def test_persistent_failure_quarantines_and_salvages(self, tmp_path):
+        fps = self._fingerprints(tmp_path)
+        plan = FaultPlan([Fault("tune.worker", "error", key=fps[0], times=-1)])
+        db, out = self._tune(tmp_path, fault_plan=plan, max_task_retries=1)
+        assert fps[0] in db.meta["quarantined"]
+        for fp in fps[1:]:  # the rest of the run survived the poison nest
+            assert db.lookup_exact(fp) is not None
+        # checkpointing: the on-disk file already holds the salvaged nests
+        on_disk = TuningDatabase.load(out)
+        assert all(on_disk.lookup_exact(fp) is not None for fp in fps[1:])
+
+    def test_resume_skips_quarantined(self, tmp_path):
+        fps = self._fingerprints(tmp_path)
+        plan = FaultPlan([Fault("tune.worker", "error", key=fps[0], times=-1)])
+        self._tune(tmp_path, fault_plan=plan, max_task_retries=0)
+        # no fault plan now, but the quarantine record keeps it skipped
+        db, _ = self._tune(tmp_path)
+        assert db.lookup_exact(fps[0]) is None
+        assert fps[0] in db.meta["quarantined"]
+
+    def test_retry_quarantined_gives_second_chance(self, tmp_path):
+        fps = self._fingerprints(tmp_path)
+        plan = FaultPlan([Fault("tune.worker", "error", key=fps[0], times=-1)])
+        self._tune(tmp_path, fault_plan=plan, max_task_retries=0)
+        db, _ = self._tune(tmp_path, retry_quarantined=True)
+        assert db.lookup_exact(fps[0]) is not None
+        assert "quarantined" not in db.meta
+
+
+@pytest.mark.slow
+class TestTunePoolCrash:
+    def test_worker_crash_quarantines_culprit_and_salvages_rest(self, tmp_path):
+        """A nest whose worker hard-crashes (os._exit) twice is quarantined;
+        co-scheduled innocents are isolated, re-run solo and survive."""
+        from repro.tools.tune import tune
+
+        kw = dict(suite="polybench", names=["gemm", "bicg"], size="mini",
+                  iterations=1, population=2, repeats=1, verbose=False)
+        ref, _ = tune(jobs=1, out=tmp_path / "ref.json", **kw)
+        fps = [e.fingerprint for e in ref.entries]
+        bad = fps[0]
+        plan = FaultPlan([Fault("tune.worker", "crash", key=bad, times=2)])
+        db, out = tune(jobs=2, out=tmp_path / "db.json", fault_plan=plan,
+                       max_task_retries=1, **kw)
+        assert bad in db.meta["quarantined"]
+        for fp in fps:
+            if fp != bad:
+                assert db.lookup_exact(fp) is not None, \
+                    "an innocent nest was lost or quarantined by association"
+        # resume against the same out tunes nothing new and keeps the record
+        db2, _ = tune(jobs=1, out=out, **kw)
+        assert bad in db2.meta["quarantined"]
+        assert len(db2.entries) == len(db.entries)
