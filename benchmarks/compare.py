@@ -13,8 +13,10 @@ default).  Metric direction is inferred from the key:
 
 ``--current`` accepts several directories — repeat runs of the same
 benchmarks — and gates on the per-metric **median** across them, so a single
-noisy shared-runner sample stops tripping the threshold; the repeat count is
-recorded in the history entry.  ``--history-out`` appends the (medianed)
+noisy shared-runner sample stops tripping the threshold; ``--stat min``
+gates on each metric's best sample instead (min for wall times, max for
+throughputs) when even the median is too flaky.  The repeat count and the
+chosen stat are recorded in the history entry.  ``--history-out`` appends the (medianed)
 current metrics to a rolling ``BENCH_history.json`` (one entry per run,
 newest last) so the bench trajectory is downloadable as a single artifact
 instead of a pile of per-run files.  Pure stdlib on purpose: the comparator
@@ -57,18 +59,38 @@ def metric_direction(key: str) -> str | None:
     return None
 
 
-def median_metrics(samples: list[dict[str, float]]) -> dict[str, float]:
-    """Per-metric median across repeat runs; a metric present in only some
-    samples is medianed over the samples that have it."""
+def aggregate_metrics(samples: list[dict[str, float]],
+                      stat: str = "median") -> dict[str, float]:
+    """Per-metric aggregate across repeat runs; a metric present in only
+    some samples aggregates over the samples that have it.
+
+    ``stat='median'`` is the default gate.  ``stat='min'`` takes each gated
+    metric's *best* sample — the minimum for lower-is-better wall times, the
+    maximum for throughputs/speedups — the flaky-shared-runner stance: a
+    run's true capability is its least-interfered sample, so only a
+    regression present in every repeat trips the gate.  Ungated metadata
+    (direction None) stays at the median either way.
+    """
+    if stat not in ("median", "min"):
+        raise ValueError(f"stat must be median|min, got {stat!r}")
     keys: set[str] = set()
     for s in samples:
         keys.update(s)
     out: dict[str, float] = {}
     for k in sorted(keys):
         vals = sorted(s[k] for s in samples if k in s)
+        direction = metric_direction(k)
+        if stat == "min" and direction is not None:
+            out[k] = vals[0] if direction == "lower" else vals[-1]
+            continue
         m = len(vals)
         out[k] = vals[m // 2] if m % 2 else 0.5 * (vals[m // 2 - 1] + vals[m // 2])
     return out
+
+
+def median_metrics(samples: list[dict[str, float]]) -> dict[str, float]:
+    """Back-compat alias: per-metric median across repeat runs."""
+    return aggregate_metrics(samples, stat="median")
 
 
 def collect_dir(path: str) -> dict[str, float]:
@@ -133,6 +155,7 @@ def merge_history(
     run_id: str,
     keep: int = HISTORY_KEEP,
     repeats: int = 1,
+    stat: str = "median",
 ) -> list[dict[str, Any]]:
     hist: list[dict[str, Any]] = []
     if os.path.isfile(history_path):
@@ -143,7 +166,8 @@ def merge_history(
                 hist = loaded
         except (OSError, json.JSONDecodeError):
             hist = []
-    hist.append({"run": run_id, "metrics": metrics, "repeats": repeats})
+    hist.append({"run": run_id, "metrics": metrics, "repeats": repeats,
+                 "stat": stat})
     hist = hist[-keep:]
     with open(history_path, "w") as fh:
         json.dump(hist, fh, indent=1)
@@ -159,6 +183,10 @@ def main(argv: Iterable[str] | None = None) -> int:
                          "several dirs = repeat runs, gated on the median")
     ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
                     help="relative regression that fails the gate (0.25 = 25%%)")
+    ap.add_argument("--stat", default="median", choices=("median", "min"),
+                    help="repeat-run aggregate to gate on: per-metric median "
+                         "(default) or the best sample (min for wall times, "
+                         "max for throughputs) — for flaky shared runners")
     ap.add_argument("--history-out", default=None,
                     help="append current metrics to this rolling history JSON")
     ap.add_argument("--run-id", default="local",
@@ -170,15 +198,15 @@ def main(argv: Iterable[str] | None = None) -> int:
         print(f"compare: no bench_*.json under {' '.join(args.current)}",
               file=sys.stderr)
         return 2
-    current = median_metrics(samples)
+    current = aggregate_metrics(samples, stat=args.stat)
     if len(samples) > 1:
-        print(f"compare: gating on the median of {len(samples)} repeat runs")
+        print(f"compare: gating on the {args.stat} of {len(samples)} repeat runs")
     baseline = load_baseline(args.baseline)
     if args.history_out:
         merge_history(args.history_out, current, args.run_id,
-                      repeats=len(samples))
+                      repeats=len(samples), stat=args.stat)
         print(f"history: appended {len(current)} metrics as run '{args.run_id}' "
-              f"(median of {len(samples)} repeats) -> {args.history_out}")
+              f"({args.stat} of {len(samples)} repeats) -> {args.history_out}")
     if not baseline:
         print("compare: no baseline found — first run, all "
               f"{len(current)} metrics recorded, gate passes")

@@ -11,12 +11,13 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,fig6,fig7,fig9,table1,"
                          "fig11,kernels,roofline,cache,fusion,tiling,transfer,"
-                         "shard,serve,resilience")
+                         "shard,serve,resilience,online")
     ap.add_argument("--repeats", type=int, default=3)
     args = ap.parse_args()
 
-    from . import (bench_cache, bench_fusion, bench_resilience, bench_serve,
-                   bench_shard, bench_tiling, bench_transfer, fig1_gemm,
+    from . import (bench_cache, bench_fusion, bench_online, bench_resilience,
+                   bench_serve, bench_shard, bench_tiling, bench_transfer,
+                   fig1_gemm,
                    fig6_robustness, fig7_ablation, fig9_python,
                    fig11_cloudsc_full, kernels_micro, roofline_report,
                    table1_cloudsc)
@@ -29,6 +30,7 @@ def main() -> None:
         "shard": lambda: bench_shard.run(repeats=args.repeats),
         "serve": lambda: bench_serve.run(repeats=args.repeats),
         "resilience": lambda: bench_resilience.run(repeats=args.repeats),
+        "online": lambda: bench_online.run(repeats=args.repeats),
         "fig1": lambda: fig1_gemm.run(repeats=args.repeats),
         "fig6": lambda: fig6_robustness.run(repeats=args.repeats),
         "fig7": lambda: fig7_ablation.run(repeats=args.repeats),

@@ -155,6 +155,29 @@ class TuningDatabase:
         self._gen += 1
         return "added"
 
+    def replace_entry(
+        self, fingerprint: str, recipe: Recipe,
+        measured_us: float | None = None, provenance: str = "",
+    ) -> tuple[Recipe, float | None, str]:
+        """Unconditionally swap an entry's recipe; returns the previous
+        ``(recipe, measured_us, provenance)`` so the caller can restore it.
+
+        ``add`` keeps whichever recipe carries the *smaller* measurement —
+        correct for offline seeding, wrong for a hot-swap or rollback where
+        the incumbent's stored timing is stale (taken on different hardware
+        or load) and the caller has just re-measured both sides live.  The
+        embedding is untouched (same canonical nest), and the generation
+        bumps so caches keyed on database state expire."""
+        self._sync()
+        i = self._by_fp.get(fingerprint)
+        if i is None:
+            raise KeyError(f"no entry for fingerprint {fingerprint!r}")
+        e = self.entries[i]
+        prev = (e.recipe, e.measured_us, e.provenance)
+        e.recipe, e.measured_us, e.provenance = recipe, measured_us, provenance
+        self._gen += 1
+        return prev
+
     def lookup_exact(self, fingerprint: str) -> Recipe | None:
         self._sync()
         i = self._by_fp.get(fingerprint)

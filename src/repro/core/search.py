@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import math
 import random
+import time
 import zlib
 from dataclasses import replace
 from typing import Callable, Mapping
@@ -161,6 +162,7 @@ def evolve_recipe(
     resolve: Callable[[Recipe], Recipe] | None = None,
     interpret: bool = True,
     repeats: int = 3,
+    deadline_s: float | None = None,
 ) -> tuple[Recipe, float]:
     """Mutation+selection over recipes, runtime fitness (paper's epochs).
 
@@ -174,8 +176,20 @@ def evolve_recipe(
     degradations and no Pallas kernel is ever built.  ``interpret`` is the
     other half of that contract: it selects interpret vs compiled Pallas,
     exactly as ``Daisy.compile`` does for the chosen backend.
+
+    ``deadline_s`` is a wall-clock budget: when it expires mid-search the
+    best recipe measured *so far* is returned (partial results) instead of
+    the search overrunning its slot — how background deployment searches
+    stay inside their scheduling window.  The budget changes only when
+    measurement stops, never what is mutated: a run that finishes under
+    its deadline walks the identical RNG sequence as an unbounded one.
     """
     rng = random.Random(rng_seed)
+    deadline = (time.monotonic() + deadline_s) if deadline_s is not None else None
+
+    def out_of_time() -> bool:
+        return deadline is not None and time.monotonic() >= deadline
+
     pop = [seed_recipe] + [_mutate(seed_recipe, rng) for _ in range(population - 1)]
     if reseed_pool:
         pop.extend(reseed_pool[: population // 2])
@@ -195,10 +209,18 @@ def evolve_recipe(
 
     best, best_t = seed_recipe, fitness(seed_recipe)
     for _ in range(iterations):
-        scored = [(fitness(r), r) for r in pop]
+        if out_of_time():
+            break
+        scored = []
+        for r in pop:
+            scored.append((fitness(r), r))
+            if out_of_time():
+                break
         scored.sort(key=lambda t: t[0])
-        if scored[0][0] < best_t:
+        if scored and scored[0][0] < best_t:
             best_t, best = scored[0]
+        if len(scored) < len(pop):
+            break  # deadline cut this iteration short: keep the partial best
         survivors = [r for _, r in scored[: max(2, population // 2)]]
         pop = survivors + [_mutate(rng.choice(survivors), rng) for _ in range(population - len(survivors))]
     return best, best_t

@@ -166,6 +166,9 @@ class DeploymentContext:
     tuning_db: TuningDatabase
     params: object
     _specs: object = None
+    # Live step-timing sink (``repro.autotune.NestTelemetry``); a disabled
+    # instance by default, so engines/trainers can observe unconditionally.
+    telemetry: object = None
 
     def place(self, tree):
         """``device_put`` a parameter-shaped tree (e.g. AdamW moments) with
@@ -193,11 +196,13 @@ def deployment_context(
     params,
     mesh=None,
     tuning_db: TuningDatabase | None = None,
+    telemetry=None,
 ) -> DeploymentContext:
     """Resolve the deployment-time context: mesh-place ``params`` (any mesh
-    with the planner's axes, via ``launch.sharding.param_specs``) and pick
+    with the planner's axes, via ``launch.sharding.param_specs``), pick
     the tuning database (caller-staged, else the shared warm
-    ``deployment_database`` instance)."""
+    ``deployment_database`` instance), and attach a telemetry sink
+    (caller-staged for online tuning, else a disabled no-op one)."""
     db = tuning_db if tuning_db is not None else deployment_database()
     specs = None
     if mesh is not None:
@@ -208,7 +213,11 @@ def deployment_context(
         shapes = jax.eval_shape(lambda p: p, params)
         specs = param_specs(shapes, mesh, cfg=cfg)
         params = jax.device_put(params, specs)
-    return DeploymentContext(cfg, mesh, db, params, specs)
+    if telemetry is None:
+        from ..autotune import NestTelemetry
+
+        telemetry = NestTelemetry(enabled=False)
+    return DeploymentContext(cfg, mesh, db, params, specs, telemetry)
 
 
 def plan_model(cfg: ModelConfig, seq: int, batch: int, db: TuningDatabase | None = None) -> list[ContractionPlan]:

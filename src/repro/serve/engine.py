@@ -210,25 +210,56 @@ class ServingEngine:
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
                  tuning_db: TuningDatabase | None = None, mesh=None,
-                 fault_plan: FaultPlan | None = None):
+                 fault_plan: FaultPlan | None = None,
+                 logit_program=None, logit_inputs=None,
+                 tuner=None, program_backend: str = "xla"):
         """``mesh`` (any mesh with a ``model`` axis, e.g. from
         ``launch.mesh.make_mesh``) places the parameters with the sharding
         planner's specs before the first jit — the decode steps then
         partition across the mesh via the committed shardings instead of
         running single-device.  ``fault_plan`` arms deterministic fault
-        injection (tests / resilience benchmark)."""
+        injection (tests / resilience benchmark).
+
+        ``logit_program`` (a canonical loop-nest :class:`~repro.core.ir.
+        Program`, e.g. ``repro.autotune.logit_pipeline_program``) fuses a
+        tuned logit post-processing stage into the jitted decode step: the
+        batched decode's ``(N, V)`` logits enter the program's ``X`` input
+        vocab-major as ``(V, N)`` and sampling reads its ``Y`` output.  The
+        program is lowered through ``Daisy`` under ``program_backend``
+        against ``tuning_db``, and the composite's jit-cache key carries
+        ``(db.uid, db.generation)`` — a database commit hot-swaps the step
+        fn at the next ``step()`` with zero traffic interruption.
+        ``logit_inputs`` supplies the program's deployment operand arrays
+        (missing ones are zero-filled).  ``tuner`` attaches a
+        ``repro.autotune.SearchSupervisor``: the engine observes per-step
+        telemetry into ``tuner.telemetry``, registers ``logit_program``,
+        and drives ``tuner.maybe_launch()`` / ``tuner.poll()`` every
+        ``tuner.check_every`` steps — the full online-adaptation loop.
+        """
         from ..models.lowering import deployment_context
 
         self.cfg, self.scfg = cfg, scfg
+        if tuner is not None:
+            if tuning_db is None:
+                tuning_db = tuner.db
+            elif tuning_db is not tuner.db:
+                raise ValueError(
+                    "tuner.db and tuning_db are different databases; the "
+                    "supervisor must commit swaps into the database the "
+                    "engine resolves recipes from")
         # Shared deployment boilerplate (mesh placement + warm pretuned
         # tuning DB + fingerprint-keyed jit lookups) — same helper the
         # Trainer constructor uses.
-        self._ctx = deployment_context(cfg, params, mesh=mesh,
-                                       tuning_db=tuning_db)
+        self._ctx = deployment_context(
+            cfg, params, mesh=mesh, tuning_db=tuning_db,
+            telemetry=tuner.telemetry if tuner is not None else None)
         self.mesh = mesh
         self.params = self._ctx.params
         self.tuning_db = self._ctx.tuning_db
+        self.telemetry = self._ctx.telemetry
         self.fault_plan = fault_plan
+        self.tuner = tuner
+        self._step_count = 0
         # prefill (s >= 1) and slot-batched decode steps; content-keyed so
         # re-created engines with an equal config share the functions and
         # their jax trace caches — slot refills and restarts never retrace
@@ -239,6 +270,24 @@ class ServingEngine:
             lambda: jax.jit(partial(M.decode_slots_greedy, cfg)))
         self._step_logits = self._ctx.jitted(
             "serve.decode_slots", lambda: jax.jit(partial(M.decode_slots, cfg)))
+        self.logit_program = logit_program
+        if logit_program is not None:
+            from ..core import Daisy, program_fingerprint
+
+            self._daisy = Daisy(db=self.tuning_db, backend=program_backend)
+            self._prog_key = program_fingerprint(logit_program)
+            self._prog_aux = self._build_aux(logit_inputs or {})
+            self._telemetry_key = self._prog_key
+            if tuner is not None:
+                tuner.register(logit_program)
+            self._prog_gen: int | None = None
+            self._resolve_step_fns()
+        else:
+            from ..core.cache import fingerprint_obj
+
+            self._telemetry_key = f"serve.step:{fingerprint_obj(cfg)[:12]}"
+            self._dispatch_greedy = self._step_greedy
+            self._dispatch_logits = self._step_logits
 
         n = scfg.batch_slots
         self._buckets = prefill_buckets(scfg.max_len, scfg.min_bucket)
@@ -315,7 +364,28 @@ class ServingEngine:
         """One scheduling iteration: harvest the mature in-flight step,
         admit queued requests into free slots, dispatch one batched decode
         over the occupied slots.  Returns the number of occupied slots
-        after dispatch (0 = idle: queue empty, nothing in flight)."""
+        after dispatch (0 = idle: queue empty, nothing in flight).
+
+        Instrumented for online tuning: busy steps are timed into the
+        telemetry sink (a no-op predicate when disabled), and an attached
+        tuner is driven every ``tuner.check_every`` steps — launches
+        background searches on the hottest nests and applies/rolls back
+        swaps at the poll point."""
+        if self.logit_program is not None:
+            self._resolve_step_fns()  # picks up database commits (hot swap)
+        t0 = time.perf_counter()
+        n = self._step_impl()
+        if n:
+            self.telemetry.observe(self._telemetry_key,
+                                   time.perf_counter() - t0)
+        self._step_count += 1
+        if self.tuner is not None \
+                and self._step_count % self.tuner.check_every == 0:
+            self.tuner.maybe_launch()
+            self.tuner.poll(engine=self)
+        return n
+
+    def _step_impl(self) -> int:
         scfg = self.scfg
         sync = scfg.temperature > 0.0
         depth = 0 if sync else max(0, scfg.pipeline_depth)
@@ -330,14 +400,14 @@ class ServingEngine:
             if self.fault_plan is not None:
                 self.fault_plan.maybe_raise("serve.step")
             if sync:
-                logits, self._states = self._step_logits(
+                logits, self._states = self._dispatch_logits(
                     self.params, self._states, self._tokens)
                 self._pending.append((logits, live))
             else:
                 # pipelined: the sampled tokens stay on device and feed the
                 # next dispatch; the host looks at them `pipeline_depth`
                 # steps later
-                next_tok, self._states = self._step_greedy(
+                next_tok, self._states = self._dispatch_greedy(
                     self.params, self._states, self._tokens)
                 self._tokens = next_tok
                 self._pending.append((next_tok, live))
@@ -347,7 +417,7 @@ class ServingEngine:
             # for the queue and for future submissions
             for i, h in live.items():
                 self._fail(h, e, slot=i)
-            return self.step() if self._queue or self._pending else 0
+            return self._step_impl() if self._queue or self._pending else 0
         # block on overdue steps: at most `depth` stay in flight (0 = the
         # host sees every step's result before dispatching the next)
         while len(self._pending) > depth:
@@ -428,6 +498,81 @@ class ServingEngine:
             self.scfg.max_len, self.scfg.batch_slots,
             self.tuning_db.uid, self.tuning_db.generation,
         )
+
+    # -- tuned logit-program composite -----------------------------------------
+    def _build_aux(self, given: dict) -> dict:
+        """Validate + stage the logit program's deployment operands.
+
+        The engine owns ``X`` (the step's vocab-major logits) and reads
+        ``Y``; every other input array of the *normalized* program is a
+        deployment operand — taken from ``logit_inputs`` when given
+        (shape-checked), zero-filled otherwise.  Unknown names are errors:
+        a typo'd operand silently zero-filled would corrupt served tokens.
+        """
+        prog = self._daisy._normalized(self.logit_program)
+        shapes = {a.name: tuple(a.shape) for a in prog.input_arrays}
+        v, n = self.cfg.vocab, self.scfg.batch_slots
+        for io in ("X", "Y"):
+            if shapes.get(io) != (v, n):
+                raise ValueError(
+                    f"logit program must carry {io} of shape (vocab, "
+                    f"batch_slots) = ({v}, {n}), got "
+                    f"{shapes.get(io)} in {self.logit_program.name!r}")
+        unknown = sorted(set(given) - set(shapes))
+        if unknown:
+            raise ValueError(
+                f"logit_inputs name(s) {unknown} are not input arrays of "
+                f"{self.logit_program.name!r} (has {sorted(shapes)})")
+        aux: dict[str, jnp.ndarray] = {}
+        for name, shape in shapes.items():
+            if name == "X":
+                continue
+            if name in given:
+                arr = jnp.asarray(given[name], jnp.float32)
+                if tuple(arr.shape) != shape:
+                    raise ValueError(
+                        f"logit_inputs[{name!r}] has shape {tuple(arr.shape)}"
+                        f", program expects {shape}")
+            else:
+                arr = jnp.zeros(shape, jnp.float32)
+            aux[name] = arr
+        return aux
+
+    def _resolve_step_fns(self) -> None:
+        """(Re)build the decode+logit-program composites when the tuning
+        database has moved — this IS the hot swap: the jit-cache key carries
+        ``(program fingerprint, db.uid, db.generation)``, so a supervisor
+        commit (or rollback) resolves a fresh composite on the next step
+        while older generations stay cached (rollback is a cache hit)."""
+        gen = self.tuning_db.generation
+        if gen == self._prog_gen:
+            return
+        self._prog_gen = gen
+        cfg, daisy = self.cfg, self._daisy
+        prog, aux = self.logit_program, self._prog_aux
+
+        def composite(sample_greedy: bool):
+            # raw (unjitted) program fn: composes under the outer jit, and
+            # Daisy's compile cache (keyed on db state) does the recipe work
+            pfn, _plan = daisy.compile(prog, jit=False)
+
+            def stepfn(params, states, tokens):
+                logits, states = M.decode_slots(cfg, params, states, tokens)
+                env = dict(aux)
+                env["X"] = logits.T  # (N, V) -> vocab-major (V, N)
+                out = pfn(env)["Y"]
+                if sample_greedy:
+                    return jnp.argmax(out, axis=0).astype(jnp.int32), states
+                return out.T, states  # back to (N, V) for host sampling
+
+            return jax.jit(stepfn)
+
+        self._dispatch_greedy = self._ctx.jitted(
+            "serve.decode_slots_greedy+program", lambda: composite(True),
+            self._prog_key, self.tuning_db.uid, gen)
+        self._dispatch_logits = self._ctx.jitted(
+            "serve.decode_slots+program", lambda: composite(False),
+            self._prog_key, self.tuning_db.uid, gen)
 
     # -- internals -------------------------------------------------------------
     def _bucket_for(self, n: int) -> int:

@@ -33,273 +33,45 @@ The pool is supervised (a long tuning run must survive its own workers):
 Deterministic fault injection: a ``fault.FaultPlan`` with site
 ``tune.worker`` (key = nest fingerprint) makes the matching worker crash
 (``os._exit``), hang, or raise — how the supervision above is tested.
+
+The search/measurement/supervision machinery itself lives in
+``repro.autotune`` (shared with the online deployment tuner); this module
+is the CLI orchestration plus compatibility aliases for the old names.
 """
 from __future__ import annotations
 
 import argparse
-import hashlib
 import os
-import tempfile
 import time
-from collections import deque
-from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
-from concurrent.futures.process import BrokenProcessPool
-from multiprocessing import get_context
 from pathlib import Path
 
 import numpy as np
 
+from ..autotune import (
+    BACKENDS,
+    SUITES,
+    PoolStall,
+    build_program,
+    program_specs,
+    run_supervised,
+    task_key,
+    tune_nest_task,
+)
 from ..core import Daisy, Program, TuningDatabase, fingerprint
 from ..core.database import pretuned_dir
 from ..core.recipes import Recipe
-from ..fault import FaultInjected, FaultPlan, RestartPolicy
+from ..fault import FaultPlan
 
-SUITES = ("polybench", "cloudsc", "all")
-BACKENDS = ("xla", "pallas_interpret", "pallas")
+# Pre-refactor names (tests and older callers import these from here).
+_task_key = task_key
+_tune_nest = tune_nest_task
+_run_tasks = run_supervised
+_PoolStall = PoolStall
 
-
-def program_specs(suite: str, names: list[str] | None = None) -> list[tuple[str, str]]:
-    """(source, name) coordinates of every program the suite tunes."""
-    specs: list[tuple[str, str]] = []
-    if suite in ("polybench", "all"):
-        from ..polybench import BENCHMARKS
-
-        sel = names or list(BENCHMARKS)
-        unknown = [n for n in sel if n not in BENCHMARKS]
-        if unknown:
-            raise SystemExit(
-                f"unknown benchmark(s) {', '.join(unknown)}; "
-                f"valid: {', '.join(BENCHMARKS)}"
-            )
-        specs += [("polybench", n) for n in sel]
-    if suite in ("cloudsc", "all"):
-        specs += [("cloudsc", "erosion"), ("cloudsc", "scheme")]
-    return specs
-
-
-def build_program(source: str, name: str, size: str) -> Program:
-    """Rebuild a program from its registry coordinates (IR computations hold
-    lambdas, which do not pickle — workers reconstruct instead of receiving)."""
-    if source == "polybench":
-        from ..polybench import BENCHMARKS
-
-        return BENCHMARKS[name].make("a", size)
-    from ..cloudsc import erosion_program, mini_cloudsc_program
-
-    nproma, klev = (128, 137) if size == "bench" else (8, 5)
-    if name == "erosion":
-        return erosion_program(nproma=nproma, klev=4 if size == "mini" else klev)
-    return mini_cloudsc_program(nproma=nproma, klev=klev)
-
-
-def _task_key(fp: str) -> str:
-    """Filesystem-safe id for a nest fingerprint (started-marker filename)."""
-    return hashlib.md5(fp.encode()).hexdigest()
-
-
-def _tune_nest(task: dict) -> dict:
-    """Process-pool worker: epoch-1 search for one canonical nest.
-
-    Rebuilds and re-normalizes the program — the pass pipeline is
-    deterministic, so ``nest_index`` addresses the same canonical nest the
-    parent enumerated (the fingerprint check below enforces it).
-    """
-    scratch = task.get("scratch")
-    if scratch:
-        # started marker: if this worker dies, the supervisor can tell the
-        # tasks that were actually running from the ones the pool never got
-        # to (only the former are charged a retry attempt)
-        (Path(scratch) / _task_key(task["fingerprint"])).touch()
-    fault = task.get("fault")  # injected by the parent's FaultPlan
-    if fault == "crash":
-        os._exit(3)  # hard kill, like a segfaulting kernel build
-    if fault == "hang":
-        time.sleep(float(task.get("hang_s", 3600.0)))
-    if fault == "error":
-        raise FaultInjected(
-            f"injected worker error for {task['name']} nest {task['nest_index']}")
-    prog = build_program(task["source"], task["name"], task["size"])
-    d = Daisy(backend=task["backend"])
-    p = d._normalized(prog)
-    nest = p.body[task["nest_index"]]
-    # fail fast, before the search burns its compile+measure budget
-    if fingerprint(nest) != task["fingerprint"]:
-        raise RuntimeError(
-            f"normalization diverged between parent and worker for "
-            f"{task['name']} nest {task['nest_index']}"
-        )
-    fp, emb, recipe, t, prov = d.seed_nest(
-        p, nest, search=task["search"], search_iterations=task["iterations"],
-        population=task["population"], repeats=task["repeats"],
-    )
-    return {"fingerprint": fp, "embedding": np.asarray(emb).tolist(),
-            "recipe": recipe.to_json(), "measured_us": t, "provenance": prov}
-
-
-class _PoolStall(RuntimeError):
-    """No task completed within the progress timeout — workers presumed hung."""
-
-
-def _run_tasks(
-    tasks: list[dict],
-    jobs: int,
-    verbose: bool,
-    on_result=None,
-    task_timeout_s: float | None = None,
-    max_task_retries: int = 1,
-    retry_backoff_s: float = 0.0,
-    fault_plan: FaultPlan | None = None,
-) -> tuple[list[dict], dict[str, str]]:
-    """Run the epoch-1 searches under supervision.
-
-    Returns ``(results, quarantined)`` where ``quarantined`` maps nest
-    fingerprints that exhausted their retries to a reason string.
-    ``on_result(task, result)`` fires as each nest lands (checkpoint hook).
-    """
-    results: list[dict] = []
-    quarantined: dict[str, str] = {}
-    policies: dict[str, RestartPolicy] = {}
-
-    def policy(fp: str) -> RestartPolicy:
-        return policies.setdefault(fp, RestartPolicy(
-            max_restarts=max_task_retries, backoff_s=retry_backoff_s))
-
-    def emit(t: dict, r: dict) -> None:
-        results.append(r)
-        if on_result is not None:
-            on_result(t, r)
-        if verbose:
-            print(f"  [{len(results)}/{len(tasks)}] {t['name']} "
-                  f"nest {t['nest_index']} -> {r['recipe']['kind']} "
-                  f"({r['measured_us']:.0f}us)", flush=True)
-
-    def charge(t: dict, exc: BaseException) -> bool:
-        """One failed attempt: True -> retry, False -> quarantined."""
-        fp = t["fingerprint"]
-        if policy(fp).should_restart(exc):
-            if verbose:
-                print(f"  retry {t['name']} nest {t['nest_index']} "
-                      f"(attempt {policies[fp].restarts + 1}): {exc}", flush=True)
-            return True
-        quarantined[fp] = (f"{t['name']} nest {t['nest_index']}: {exc} "
-                           f"(after {policies[fp].restarts} attempt(s))")
-        if verbose:
-            print(f"  QUARANTINED {t['name']} nest {t['nest_index']}: {exc}",
-                  flush=True)
-        return False
-
-    def consult(t: dict) -> dict:
-        """Parent-side fault-plan consult: embed a picklable fault kind
-        (dropping any stale kind from a previous attempt — a consumed fault
-        must not replay on the retry)."""
-        t = {k: v for k, v in t.items() if k != "fault"}
-        if fault_plan is None:
-            return t
-        f = fault_plan.fire("tune.worker", key=t["fingerprint"])
-        if f is not None:
-            t["fault"] = f.kind
-        return t
-
-    if jobs <= 1 or len(tasks) <= 1:
-        # in-process path: worker-kill faults cannot be executed literally
-        # (they would kill the run itself) — every injected kind raises and
-        # goes through the same retry/quarantine accounting
-        queue = deque(tasks)
-        while queue:
-            t = consult(queue.popleft())
-            try:
-                if t.get("fault"):
-                    raise FaultInjected(
-                        f"injected {t['fault']} for {t['name']} "
-                        f"nest {t['nest_index']}")
-                r = _tune_nest(t)
-            except Exception as e:  # noqa: BLE001 — supervised retry
-                if charge(t, e):
-                    queue.append(t)
-                continue
-            emit(t, r)
-        return results, quarantined
-
-    # spawn, not fork: workers must initialize their own JAX runtime rather
-    # than inherit the parent's (forked XLA thread pools deadlock)
-    ctx = get_context("spawn")
-    remaining = list(tasks)
-    # a pool-wide breakage cannot name its culprit: every started task in
-    # the round is a suspect.  Suspects re-run SOLO (one per round) so the
-    # next crash charges exactly the poison nest and co-started innocents
-    # succeed instead of being quarantined by association.
-    suspects: deque[dict] = deque()
-    with tempfile.TemporaryDirectory(prefix="repro-tune-") as scratch:
-        while remaining or suspects:
-            if suspects:
-                src = [suspects.popleft()]
-            else:
-                src, remaining = remaining, []
-            round_tasks = []
-            for t in src:
-                t = consult(dict(t, scratch=scratch))
-                (Path(scratch) / _task_key(t["fingerprint"])).unlink(missing_ok=True)
-                round_tasks.append(t)
-            lost: list[dict] = []
-            broken: BaseException | None = None
-            ex = ProcessPoolExecutor(max_workers=min(jobs, len(round_tasks)),
-                                     mp_context=ctx)
-            futs = {ex.submit(_tune_nest, t): t for t in round_tasks}
-            pending = set(futs)
-            try:
-                while pending:
-                    done, pending = wait(pending, timeout=task_timeout_s,
-                                         return_when=FIRST_COMPLETED)
-                    if not done:
-                        raise _PoolStall(
-                            f"no task completed within {task_timeout_s}s — "
-                            f"killing {len(pending)} in-flight worker(s)")
-                    for f in done:
-                        t = futs[f]
-                        try:
-                            r = f.result()
-                        except BrokenProcessPool as e:
-                            broken = e
-                            lost.append(t)
-                            continue
-                        except Exception as e:  # noqa: BLE001 — worker raised
-                            if charge(t, e):
-                                remaining.append(t)
-                            continue
-                        emit(t, r)
-                    if broken is not None:
-                        raise broken
-            except (BrokenProcessPool, _PoolStall) as e:
-                broken = e
-                lost.extend(futs[f] for f in pending)
-                # hung/orphaned workers never exit on their own — kill them
-                # so shutdown does not block behind a sleeping process
-                for p in list(getattr(ex, "_processes", {}).values()):
-                    try:
-                        p.terminate()
-                    except Exception:  # noqa: BLE001
-                        pass
-                ex.shutdown(wait=False, cancel_futures=True)
-            else:
-                ex.shutdown()
-            if broken is not None:
-                started = [t for t in lost
-                           if (Path(scratch) / _task_key(t["fingerprint"])).exists()]
-                never_started = [t for t in lost if t not in started]
-                if not started:
-                    # nothing even began before the pool died: the pool
-                    # itself is the problem, not a poison task — charge
-                    # everyone so a permanently-broken pool still terminates
-                    started, never_started = never_started, []
-                for t in started:
-                    if charge(t, broken):
-                        suspects.append(t)
-                remaining.extend(never_started)
-                if verbose:
-                    print(f"  pool lost ({broken}); salvaged {len(results)} "
-                          f"result(s), {len(suspects)} suspect(s) to isolate, "
-                          f"{len(remaining)} task(s) requeued", flush=True)
-    return results, quarantined
+__all__ = [
+    "BACKENDS", "SUITES", "PoolStall", "build_program", "program_specs",
+    "run_supervised", "task_key", "tune_nest_task", "tune", "main",
+]
 
 
 def tune(
@@ -384,7 +156,7 @@ def tune(
 
     # epoch 1, fanned across the pool under supervision
     t0 = time.perf_counter()
-    _, quarantined = _run_tasks(
+    _, quarantined = run_supervised(
         tasks, jobs, verbose, on_result=on_result,
         task_timeout_s=task_timeout_s, max_task_retries=max_task_retries,
         fault_plan=fault_plan,

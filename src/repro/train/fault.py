@@ -1,7 +1,9 @@
 """Compatibility shim: the fault-tolerance scaffolding grew beyond the
 trainer (serving error isolation, tune-pool supervision, fault injection)
 and now lives in :mod:`repro.fault`.  Import from there; these re-exports
-keep the PR-6 import paths working."""
+keep the PR-6 import paths working for one more release."""
+import warnings
+
 from ..fault import (  # noqa: F401
     Fault,
     FaultInjected,
@@ -10,3 +12,7 @@ from ..fault import (  # noqa: F401
     RestartPolicy,
     StragglerMonitor,
 )
+
+warnings.warn(
+    "repro.train.fault is a compatibility shim; import from repro.fault "
+    "instead", DeprecationWarning, stacklevel=2)

@@ -130,11 +130,16 @@ class Trainer:
         seed: int = 0,
         tuning_db: TuningDatabase | None = None,
         mesh=None,
+        telemetry=None,
     ):
         """``mesh`` places parameters (and hence the AdamW moments derived
         from them) with ``launch.sharding.param_specs`` before the step jit
         is built — gradients then reduce across the mesh's data axes via the
-        committed shardings (pjit), no step-function changes needed."""
+        committed shardings (pjit), no step-function changes needed.
+        ``telemetry`` (a ``repro.autotune.NestTelemetry``, e.g. a
+        ``SearchSupervisor``'s) receives per-step wall times so the online
+        tuner can rank training among its heat sources; without one the
+        observations hit a disabled no-op sink."""
         from ..models.lowering import deployment_context
 
         self.cfg, self.opt_cfg, self.tcfg = cfg, opt_cfg, tcfg
@@ -144,8 +149,10 @@ class Trainer:
         # ServingEngine constructor uses.
         self._ctx = deployment_context(
             cfg, M.init_params(cfg, jax.random.PRNGKey(seed)),
-            mesh=mesh, tuning_db=tuning_db)
+            mesh=mesh, tuning_db=tuning_db, telemetry=telemetry)
         self.tuning_db = self._ctx.tuning_db
+        self.telemetry = self._ctx.telemetry
+        self._telemetry_key = f"train.step:{fingerprint_obj(cfg)[:12]}"
         self.data = LMDataPipeline(data_cfg)
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
         self.monitor = StragglerMonitor()
@@ -232,6 +239,7 @@ class Trainer:
                 loss = float(metrics["loss"])
                 dt = time.perf_counter() - t0
                 self.monitor.observe(self.step, dt)
+                self.telemetry.observe(self._telemetry_key, dt)
                 self.step += 1
                 rec = {"step": self.step, "loss": loss, "dt": dt,
                        "lr": float(metrics["lr"]), "skipped": bool(metrics["skipped"])}

@@ -56,6 +56,23 @@ class TestMetrics:
         got = C.collect_dir(str(base))
         assert got["bench_tiling:recurrence.scan_us"] == 100.0
 
+    def test_aggregate_min_is_direction_aware(self):
+        s1 = {"x:a_us": 100.0, "x:speedup": 2.0, "x:meta.n": 1.0}
+        s2 = {"x:a_us": 50.0, "x:speedup": 8.0, "x:meta.n": 3.0}
+        s3 = {"x:a_us": 200.0, "x:speedup": 4.0, "x:meta.n": 5.0}
+        agg = C.aggregate_metrics([s1, s2, s3], stat="min")
+        assert agg["x:a_us"] == 50.0      # lower-better -> min sample
+        assert agg["x:speedup"] == 8.0    # higher-better -> max sample
+        assert agg["x:meta.n"] == 3.0     # ungated -> stays at the median
+
+    def test_aggregate_median_matches_median_metrics(self):
+        samples = [{"x:a_us": 1.0}, {"x:a_us": 3.0}, {"x:a_us": 2.0}]
+        assert C.aggregate_metrics(samples) == C.median_metrics(samples)
+
+    def test_aggregate_rejects_unknown_stat(self):
+        with pytest.raises(ValueError, match="median|min"):
+            C.aggregate_metrics([{"x:a_us": 1.0}], stat="mean")
+
 
 class TestCompare:
     def test_no_regression_passes(self):
@@ -163,6 +180,44 @@ class TestMain:
         entry = json.loads(hist.read_text())[-1]
         assert entry["repeats"] == 3
         assert entry["metrics"]["bench_x:recurrence.scan_us"] == 100.0
+
+    def test_stat_min_survives_majority_noise(self, dirs, tmp_path):
+        """Two of three samples interfered-with: the median gate fails but
+        --stat min gates on the clean sample and passes; the history entry
+        records which stat produced its metrics."""
+        base, _ = dirs
+        write(base / "bench_x.json", BENCH)
+        reps = []
+        for i, scan_us in enumerate((100.0, 300.0, 400.0)):
+            d = tmp_path / f"rep{i}"
+            d.mkdir()
+            noisy = json.loads(json.dumps(BENCH))
+            noisy["recurrence"]["scan_us"] = scan_us
+            write(d / "bench_x.json", noisy)
+            reps.append(str(d))
+        assert C.main(["--baseline", str(base), "--current", *reps]) == 1
+        hist = tmp_path / "BENCH_history.json"
+        assert C.main(["--baseline", str(base), "--current", *reps,
+                       "--stat", "min", "--history-out", str(hist),
+                       "--run-id", "sha2"]) == 0
+        entry = json.loads(hist.read_text())[-1]
+        assert entry["stat"] == "min"
+        assert entry["metrics"]["bench_x:recurrence.scan_us"] == 100.0
+
+    def test_stat_min_still_fails_on_real_regression(self, dirs, tmp_path):
+        """A regression present in EVERY repeat trips the gate even at min."""
+        base, _ = dirs
+        write(base / "bench_x.json", BENCH)
+        reps = []
+        for i in range(2):
+            d = tmp_path / f"rep{i}"
+            d.mkdir()
+            slow = json.loads(json.dumps(BENCH))
+            slow["recurrence"]["scan_us"] = 300.0
+            write(d / "bench_x.json", slow)
+            reps.append(str(d))
+        assert C.main(["--baseline", str(base), "--current", *reps,
+                       "--stat", "min"]) == 1
 
     def test_empty_repeat_dir_skipped(self, dirs, tmp_path):
         """A dir without bench JSONs (e.g. job not run) doesn't poison the

@@ -12,9 +12,18 @@ from repro.configs import get_config
 from repro.data.pipeline import DataConfig, LMDataPipeline
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, lr_at
 from repro.optim.compression import compress_grads, decompress_grads
+from repro.fault import Heartbeat, StragglerMonitor
 from repro.train.checkpoint import CheckpointManager
-from repro.train.fault import Heartbeat, StragglerMonitor
 from repro.train.train_loop import Trainer, TrainerConfig
+
+
+def test_train_fault_shim_warns_on_import():
+    import importlib
+    import sys
+
+    sys.modules.pop("repro.train.fault", None)
+    with pytest.warns(DeprecationWarning, match="repro.fault"):
+        importlib.import_module("repro.train.fault")
 
 
 CFG = get_config("minicpm-2b").reduced()
