@@ -1,0 +1,266 @@
+"""Microbenchmark for the COFFEE-style rewrite passes (PR-10 tentpole).
+
+Two workload families, one per rewrite mechanism:
+
+* **LICM** — the multi-species CLOUDSC saturation chain
+  (:func:`repro.cloudsc.saturation_chain_program`): four banded JK-carried
+  flux recurrences whose wet-bulb source reads per-level ``TREF``/``PREF``
+  slices.  XLA cannot hoist the source (it is a per-step ``xs`` slice of
+  each ``lax.scan``) nor share it across the four separate scans;
+  ``LICMPass`` computes it once into one shared ``(klev, nproma)`` temp.
+  This leg is the CI gate: >= 1.3x over the identical pipeline with
+  ``rewrite=False``, with the transformed program proven **bit-identical**
+  to the untransformed one on the float64 ``execute_numpy`` oracle at a
+  reduced size, and the two jitted variants bit-identical to each other at
+  the bench size (LICM runs the same float ops, just once).
+
+* **Expansion** — 2mm/gemver variants whose contraction carries a sum
+  factor (``(A + E) * (alpha*B)``).  As written the accumulation is not a
+  pure product, so idiom detection classifies it ``reduction`` and the
+  nest lowers to a broadcast-and-sum; ``ExpandFactorPass`` distributes it
+  into pure-product siblings that each dispatch as ``blas3``/``blas2``
+  einsums.  Expansion reassociates the additions, so these legs gate on
+  the float64 oracle with ``allclose`` and on a scale-relative comparison
+  of the two jitted variants (reported, not hard-gated: einsum dispatch is
+  measured elsewhere).
+
+CSV rows (plus optional JSON for the CI artifact):
+
+  rewrite_sat_norewrite / rewrite_sat_rewrite       — the gated LICM leg
+  rewrite_2mm_norewrite / rewrite_2mm_rewrite       — expansion, blas3
+  rewrite_gemver_norewrite / rewrite_gemver_rewrite — expansion, blas2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+import jax
+
+from repro.cloudsc import saturation_chain_inputs, saturation_chain_program
+from repro.cloudsc.scheme import SPECIES
+from repro.core import (
+    Array,
+    Computation,
+    Loop,
+    Program,
+    Schedule,
+    acc,
+    compile_jax,
+    execute_numpy,
+    optimization_pipeline,
+)
+from repro.core.ir import Const, Read
+from repro.core.passes import PassContext
+from repro.core.util import time_fn
+
+from .common import emit
+
+ALPHA, BETA = 1.5, 1.2
+ZERO = Const(0.0)
+SAT_GATE = 1.3
+
+
+# ---------------------------------------------------------------------------
+# expansion-leg builders: contractions with a sum factor
+# ---------------------------------------------------------------------------
+def mm2_sum_program(ni: int, nj: int, nk: int, nl: int) -> Program:
+    """2mm variant: ``tmp += (A+E) * (alpha*B); D = beta*D + tmp@C2``.
+
+    The first contraction's expression is a *sum* times a matrix, so the
+    as-written nest is not multiplicative and cannot idiom-dispatch;
+    expansion splits it into two pure-product matmuls.
+    """
+    arrays = (Array("A", (ni, nk)), Array("E", (ni, nk)), Array("B", (nk, nj)),
+              Array("C2", (nj, nl)), Array("D", (ni, nl)),
+              Array("tmp", (ni, nj)))
+    z = Computation("zero", acc("tmp", "i", "j"), (), ZERO)
+    m1 = Computation(
+        "m1", acc("tmp", "i", "j"),
+        (acc("A", "i", "k"), acc("E", "i", "k"), acc("B", "k", "j")),
+        (Read(0) + Read(1)) * (ALPHA * Read(2)), accumulate="+")
+    sc = Computation("sc", acc("D", "p", "q"), (acc("D", "p", "q"),),
+                     Read(0) * BETA)
+    m2 = Computation(
+        "m2", acc("D", "p", "q"),
+        (acc("tmp", "p", "r"), acc("C2", "r", "q")),
+        Read(0) * Read(1), accumulate="+")
+    return Program("2mm_sum", arrays, (
+        Loop("i", ni, body=(Loop("j", nj, body=(
+            z, Loop("k", nk, body=(m1,)))),)),
+        Loop("p", ni, body=(Loop("q", nl, body=(
+            sc, Loop("r", nj, body=(m2,)))),)),
+    ), temps=("tmp",))
+
+
+def gemver_sum_program(n: int) -> Program:
+    """gemver variant: both matvecs read the rank-updated ``A + B2`` sum."""
+    arrays = (Array("A", (n, n)), Array("B2", (n, n)), Array("w", (n,)),
+              Array("x", (n,)), Array("y", (n,)), Array("z", (n,)))
+    x_up = Computation(
+        "x_up", acc("x", "j2"),
+        (acc("A", "i2", "j2"), acc("B2", "i2", "j2"), acc("y", "i2")),
+        (Read(0) + Read(1)) * (BETA * Read(2)), accumulate="+")
+    x_z = Computation("x_z", acc("x", "j3"), (acc("x", "j3"), acc("z", "j3")),
+                      Read(0) + Read(1))
+    w_up = Computation(
+        "w_up", acc("w", "i4"),
+        (acc("A", "i4", "j4"), acc("B2", "i4", "j4"), acc("x", "j4")),
+        (Read(0) + Read(1)) * (ALPHA * Read(2)), accumulate="+")
+    return Program("gemver_sum", arrays, (
+        Loop("i2", n, body=(Loop("j2", n, body=(x_up,)),)),
+        Loop("j3", n, body=(x_z,)),
+        Loop("i4", n, body=(Loop("j4", n, body=(w_up,)),)),
+    ))
+
+
+def _sum_inputs(prog: Program, seed: int = 0,
+                dtype=np.float64) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    zero = {"w", "x"}
+    return {
+        a.name: (np.zeros(a.shape, dtype) if a.name in zero
+                 else rng.uniform(-1.0, 1.0, size=a.shape).astype(dtype))
+        for a in prog.arrays if a.name not in prog.temps
+    }
+
+
+# ---------------------------------------------------------------------------
+# measurement helpers
+# ---------------------------------------------------------------------------
+def _jit_outputs(program: Program, sched: Schedule, outs: list[str]):
+    body = compile_jax(program, sched)
+    return jax.jit(lambda a: {k: body(a)[k] for k in outs})
+
+
+def _oracle_bit_identical(build, outs: list[str], inputs: dict) -> None:
+    """Reduced-size float64 gate: both pipelines == the untransformed nests."""
+    prog = build()
+    ref = execute_numpy(prog, dict(inputs))
+    for rw in (True, False):
+        variant = optimization_pipeline(fuse=True, rewrite=rw).run(prog)
+        got = execute_numpy(variant, dict(inputs))
+        for k in outs:
+            assert np.array_equal(got[k], ref[k]), (prog.name, rw, k)
+
+
+def _oracle_allclose(build, outs: list[str], inputs: dict) -> None:
+    """Reduced-size float64 gate for the reassociating expansion legs."""
+    prog = build()
+    ref = execute_numpy(prog, dict(inputs))
+    got = execute_numpy(
+        optimization_pipeline(fuse=True, rewrite=True).run(prog), dict(inputs))
+    for k in outs:
+        assert np.allclose(got[k], ref[k], rtol=1e-10, atol=1e-12), \
+            (prog.name, k)
+
+
+def _expansion_leg(name: str, prog: Program, outs: list[str],
+                   repeats: int) -> dict:
+    ctx = PassContext()
+    rw = optimization_pipeline(fuse=True, rewrite=True).run(prog, ctx)
+    no = optimization_pipeline(fuse=True, rewrite=False).run(prog)
+    expanded = ctx.stat("expand_factor", "expanded", 0)
+    assert expanded, f"{name}: ExpandFactorPass split nothing"
+
+    sched = Schedule(mode="canonical", use_idioms=True)
+    ins = _sum_inputs(prog, dtype=np.float32)
+    fn_no = _jit_outputs(no, sched, outs)
+    fn_rw = _jit_outputs(rw, sched, outs)
+    r_no, r_rw = fn_no(ins), fn_rw(ins)
+    for k in outs:
+        a, b = np.asarray(r_no[k]), np.asarray(r_rw[k])
+        scale = float(np.max(np.abs(a))) or 1.0
+        assert np.allclose(a, b, rtol=0.0, atol=1e-5 * scale), (name, k)
+    no_us = time_fn(lambda: fn_no(ins), repeats=repeats)
+    rw_us = time_fn(lambda: fn_rw(ins), repeats=repeats)
+    speedup = no_us / max(rw_us, 1e-9)
+    emit(f"rewrite_{name}_norewrite", no_us)
+    emit(f"rewrite_{name}_rewrite", rw_us,
+         f"expanded={expanded},speedup={speedup:.2f}x")
+    return {f"{name}_norewrite_us": no_us, f"{name}_rewrite_us": rw_us,
+            f"{name}_expanded": expanded, f"{name}_speedup": speedup}
+
+
+def run(repeats: int = 5, json_path: str | None = None,
+        nproma: int = 2048, klev: int = 137, iters: int = 3) -> dict:
+    sat_outs = [f"PFLUX_{nm}" for nm, _, _ in SPECIES] + ["TEND"]
+
+    # -- gated LICM leg: the multi-species saturation chain ------------------
+    _oracle_bit_identical(
+        lambda: saturation_chain_program(64, 17, iters=iters), sat_outs,
+        saturation_chain_inputs(64, 17, seed=1))
+
+    prog = saturation_chain_program(nproma, klev, iters=iters)
+    ctx = PassContext()
+    rw = optimization_pipeline(fuse=True, rewrite=True).run(prog, ctx)
+    no = optimization_pipeline(fuse=True, rewrite=False).run(prog)
+    hoisted = ctx.stat("licm", "hoisted", 0)
+    reused = ctx.stat("licm", "reused", 0)
+    assert hoisted, "LICMPass hoisted nothing from the saturation chain"
+
+    sched = Schedule(mode="canonical", use_idioms=False, scan=True)
+    ins = {k: v.astype(np.float32)
+           for k, v in saturation_chain_inputs(nproma, klev).items()}
+    fn_no = _jit_outputs(no, sched, sat_outs)
+    fn_rw = _jit_outputs(rw, sched, sat_outs)
+    r_no, r_rw = fn_no(ins), fn_rw(ins)
+    for k in sat_outs:  # same float ops, just fewer of them -> bit-identical
+        assert np.array_equal(np.asarray(r_no[k]), np.asarray(r_rw[k])), k
+    no_us = time_fn(lambda: fn_no(ins), repeats=repeats)
+    rw_us = time_fn(lambda: fn_rw(ins), repeats=repeats)
+    speedup = no_us / max(rw_us, 1e-9)
+    emit("rewrite_sat_norewrite", no_us,
+         f"flops={ctx.stat('licm', 'flops_before', 0)}")
+    emit("rewrite_sat_rewrite", rw_us,
+         f"flops={ctx.stat('licm', 'flops_after', 0)},hoisted={hoisted},"
+         f"reused={reused},speedup={speedup:.2f}x")
+
+    results = {
+        "nproma": nproma, "klev": klev, "iters": iters,
+        "sat_norewrite_us": no_us, "sat_rewrite_us": rw_us,
+        "sat_speedup": speedup,
+        "licm_hoisted": hoisted, "licm_reused": reused,
+        "licm_flops_before": ctx.stat("licm", "flops_before", 0),
+        "licm_flops_after": ctx.stat("licm", "flops_after", 0),
+        "speedup_ok": bool(speedup >= SAT_GATE),
+        "pass_seconds": {r.name: r.seconds for r in ctx.records},
+    }
+
+    # -- expansion legs: reported, value-checked -----------------------------
+    _oracle_allclose(lambda: mm2_sum_program(8, 9, 10, 11), ["D"],
+                     _sum_inputs(mm2_sum_program(8, 9, 10, 11), seed=2))
+    _oracle_allclose(lambda: gemver_sum_program(12), ["w", "x"],
+                     _sum_inputs(gemver_sum_program(12), seed=3))
+    results.update(_expansion_leg(
+        "2mm", mm2_sum_program(256, 256, 256, 256), ["D"], repeats))
+    results.update(_expansion_leg(
+        "gemver", gemver_sum_program(2000), ["w", "x"], repeats))
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=1)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--nproma", type=int, default=2048)
+    ap.add_argument("--klev", type=int, default=137)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    results = run(repeats=args.repeats, json_path=args.json,
+                  nproma=args.nproma, klev=args.klev, iters=args.iters)
+    if not results["speedup_ok"]:
+        raise SystemExit(
+            f"saturation-chain rewrite speedup {results['sat_speedup']:.2f}x "
+            f"< {SAT_GATE}x over the no-rewrite pipeline")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,13 +10,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig1,fig6,fig7,fig9,table1,"
-                         "fig11,kernels,roofline,cache,fusion,tiling,transfer,"
-                         "shard,serve,resilience,online")
+                         "fig11,kernels,roofline,cache,fusion,rewrite,tiling,"
+                         "transfer,shard,serve,resilience,online")
     ap.add_argument("--repeats", type=int, default=3)
     args = ap.parse_args()
 
     from . import (bench_cache, bench_fusion, bench_online, bench_resilience,
-                   bench_serve, bench_shard, bench_tiling, bench_transfer,
+                   bench_rewrite, bench_serve, bench_shard, bench_tiling,
+                   bench_transfer,
                    fig1_gemm,
                    fig6_robustness, fig7_ablation, fig9_python,
                    fig11_cloudsc_full, kernels_micro, roofline_report,
@@ -25,6 +26,7 @@ def main() -> None:
     suites = {
         "cache": lambda: bench_cache.run(repeats=args.repeats),
         "fusion": lambda: bench_fusion.run(repeats=args.repeats),
+        "rewrite": lambda: bench_rewrite.run(repeats=args.repeats),
         "tiling": lambda: bench_tiling.run(repeats=args.repeats),
         "transfer": lambda: bench_transfer.run(repeats=args.repeats),
         "shard": lambda: bench_shard.run(repeats=args.repeats),

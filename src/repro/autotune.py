@@ -41,6 +41,24 @@ A poison candidate can never take down serving: searches run off the
 serving thread (``mode='thread'``/``'spawn'``), worker crashes / hangs /
 errors are retried then quarantined by the pool, and nothing reaches the
 live database without an executed validation.
+
+The telemetry -> search -> swap lifecycle, end to end::
+
+    from repro.autotune import SearchSupervisor, SwapPolicy, logit_pipeline_program
+
+    prog = logit_pipeline_program(vocab=cfg.vocab, slots=8)
+    sup = SearchSupervisor(db, mode="thread",        # searches off-thread
+                           policy=SwapPolicy(margin=0.1))
+    eng = ServingEngine(cfg, params, scfg, tuner=sup,
+                        logit_program=prog, logit_inputs={"B": bias})
+    while serving:
+        eng.step()          # times each busy step into sup.telemetry and
+                            # drives maybe_launch()/poll() periodically
+    sup.fold_back("data/fleet.json")                 # winners persist
+
+See ``docs/architecture.md`` (Deployment layers) for where this sits in
+the system, and ``benchmarks/bench_online.py`` for the gated end-to-end
+story (stale database -> adaptation -> bit-identical tokens -> fold-back).
 """
 from __future__ import annotations
 

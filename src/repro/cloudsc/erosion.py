@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core.ir import Array, Computation, Loop, Program, acc, aff
+from ..core.ir import Array, Call, Computation, Expr, Loop, Program, Read, acc, as_expr, emin
 
 # IFS surrogate constants (physically plausible; ratios match the paper)
 RTT = 273.16
@@ -73,6 +73,11 @@ def foeldcpm(t):
     return a * RALVDCP + (1.0 - a) * RALSDCP
 
 
+def _ecall(fn, *args) -> Expr:
+    """A symbolic ``Call`` node over one of the thermodynamic helpers."""
+    return Call(fn.__name__, fn, tuple(as_expr(a) for a in args))
+
+
 def erosion_program(nproma: int = 128, klev: int = 137, name: str = "cloudsc_erosion") -> Program:
     """The Fig. 10a loop nest: DO JK / DO JL / <scalar chain>."""
     A = lambda n: acc(n, "JK", "JL")  # noqa: E731
@@ -81,34 +86,39 @@ def erosion_program(nproma: int = 128, klev: int = 137, name: str = "cloudsc_ero
     def comp(nm, write, reads, expr, accumulate=None):
         return Computation(nm, write, tuple(reads), expr, accumulate)
 
+    qs_expr = _ecall(foeewm, Read(0)) * Read(1)
+    cor_expr = 1.0 / (1.0 - RETV * Read(0))
+    cond_expr = (Read(0) - Read(1)) / (
+        1.0 + Read(1) * Read(2) * _ecall(foedem, Read(3)))
+    tup_expr = Read(0) + _ecall(foeldcpm, Read(0)) * Read(1)
     body = (
-        comp("zqp", S("ZQP"), [A("PAP")], lambda p: 1.0 / p),
+        comp("zqp", S("ZQP"), [A("PAP")], 1.0 / Read(0)),
         # first saturation pass
-        comp("qs1", S("ZQSAT"), [A("ZTP1"), S("ZQP")], lambda t, qp: foeewm(t) * qp),
-        comp("qs1c", S("ZQSAT"), [S("ZQSAT")], lambda q: _xp(q).minimum(0.5, q)),
-        comp("cor1", S("ZCOR"), [S("ZQSAT")], lambda q: 1.0 / (1.0 - RETV * q)),
-        comp("qs1m", S("ZQSAT"), [S("ZQSAT"), S("ZCOR")], lambda q, c: q * c),
+        comp("qs1", S("ZQSAT"), [A("ZTP1"), S("ZQP")], qs_expr),
+        comp("qs1c", S("ZQSAT"), [S("ZQSAT")], emin(0.5, Read(0))),
+        comp("cor1", S("ZCOR"), [S("ZQSAT")], cor_expr),
+        comp("qs1m", S("ZQSAT"), [S("ZQSAT"), S("ZCOR")], Read(0) * Read(1)),
         comp(
             "cond1",
             S("ZCOND"),
             [A("ZQSMIX"), S("ZQSAT"), S("ZCOR"), A("ZTP1")],
-            lambda qm, qs, cor, t: (qm - qs) / (1.0 + qs * cor * foedem(t)),
+            cond_expr,
         ),
-        comp("t1", A("ZTP1"), [A("ZTP1"), S("ZCOND")], lambda t, c: t + foeldcpm(t) * c),
-        comp("q1", A("ZQSMIX"), [A("ZQSMIX"), S("ZCOND")], lambda q, c: q - c),
+        comp("t1", A("ZTP1"), [A("ZTP1"), S("ZCOND")], tup_expr),
+        comp("q1", A("ZQSMIX"), [A("ZQSMIX"), S("ZCOND")], Read(0) - Read(1)),
         # second saturation pass
-        comp("qs2", S("ZQSAT"), [A("ZTP1"), S("ZQP")], lambda t, qp: foeewm(t) * qp),
-        comp("qs2c", S("ZQSAT"), [S("ZQSAT")], lambda q: _xp(q).minimum(0.5, q)),
-        comp("cor2", S("ZCOR"), [S("ZQSAT")], lambda q: 1.0 / (1.0 - RETV * q)),
-        comp("qs2m", S("ZQSAT"), [S("ZQSAT"), S("ZCOR")], lambda q, c: q * c),
+        comp("qs2", S("ZQSAT"), [A("ZTP1"), S("ZQP")], qs_expr),
+        comp("qs2c", S("ZQSAT"), [S("ZQSAT")], emin(0.5, Read(0))),
+        comp("cor2", S("ZCOR"), [S("ZQSAT")], cor_expr),
+        comp("qs2m", S("ZQSAT"), [S("ZQSAT"), S("ZCOR")], Read(0) * Read(1)),
         comp(
             "cond2",
             S("ZCOND1"),
             [A("ZQSMIX"), S("ZQSAT"), S("ZCOR"), A("ZTP1")],
-            lambda qm, qs, cor, t: (qm - qs) / (1.0 + qs * cor * foedem(t)),
+            cond_expr,
         ),
-        comp("t2", A("ZTP1"), [A("ZTP1"), S("ZCOND1")], lambda t, c: t + foeldcpm(t) * c),
-        comp("q2", A("ZQSMIX"), [A("ZQSMIX"), S("ZCOND1")], lambda q, c: q - c),
+        comp("t2", A("ZTP1"), [A("ZTP1"), S("ZCOND1")], tup_expr),
+        comp("q2", A("ZQSMIX"), [A("ZQSMIX"), S("ZCOND1")], Read(0) - Read(1)),
     )
     nest = Loop("JK", klev, body=(Loop("JL", nproma, body=body),))
     arrays = (

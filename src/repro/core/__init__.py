@@ -13,11 +13,21 @@ from .ir import (  # noqa: F401
     Access,
     Affine,
     Array,
+    BinOp,
+    Call,
     Computation,
+    Const,
+    Expr,
     Loop,
+    Neg,
     Program,
+    Read,
     acc,
     aff,
+    as_expr,
+    emax,
+    emin,
+    expr_ops,
     fingerprint,
     program_fingerprint,
 )
@@ -36,6 +46,13 @@ from .normalize import (  # noqa: F401
     stride_minimization,
 )
 from .fusion import FusionPass, fuse_program, optimization_pipeline  # noqa: F401
+from .rewrite import (  # noqa: F401
+    CSEPass,
+    ExpandFactorPass,
+    LICMPass,
+    program_flops,
+    rewrite_passes,
+)
 from .codegen import Schedule, compile_jax, execute_numpy, run_jax  # noqa: F401
 from .partition import (  # noqa: F401
     NestPartition,

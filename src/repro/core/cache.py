@@ -33,19 +33,24 @@ import numpy as np
 
 @dataclass
 class CacheStats:
+    """Hit/miss/eviction counters for one ``CompilationCache``."""
+
     hits: int = 0
     misses: int = 0
     evictions: int = 0
 
     @property
     def lookups(self) -> int:
+        """Total lookups (hits + misses)."""
         return self.hits + self.misses
 
     @property
     def hit_rate(self) -> float:
+        """Fraction of lookups served from the cache (0.0 when unused)."""
         return self.hits / self.lookups if self.lookups else 0.0
 
     def as_dict(self) -> dict[str, float]:
+        """The counters as a plain dict (telemetry/JSON artifacts)."""
         return {
             "hits": self.hits,
             "misses": self.misses,
@@ -86,6 +91,7 @@ class CompilationCache:
         return key in self._entries
 
     def get(self, key: Hashable, default: Any = None) -> Any:
+        """Look ``key`` up, counting the hit/miss and refreshing LRU order."""
         val = self._entries.get(key, _MISSING)
         if val is _MISSING:
             self.stats.misses += 1
@@ -95,6 +101,7 @@ class CompilationCache:
         return val
 
     def put(self, key: Hashable, value: Any) -> None:
+        """Insert (or refresh) ``key``, evicting LRU entries past capacity."""
         self._entries[key] = value
         self._entries.move_to_end(key)
         while len(self._entries) > self.capacity:
@@ -102,6 +109,7 @@ class CompilationCache:
             self.stats.evictions += 1
 
     def get_or_build(self, key: Hashable, build: Callable[[], Any]) -> Any:
+        """Return the cached value for ``key``, building + caching on miss."""
         val = self.get(key, _MISSING)
         if val is _MISSING:
             val = build()

@@ -67,6 +67,12 @@ _ACC_REDUCE = {"+": jnp.sum, "*": jnp.prod, "max": jnp.max, "min": jnp.min}
 # Oracle: literal numpy interpreter
 # ---------------------------------------------------------------------------
 def execute_numpy(program: Program, inputs: Mapping[str, np.ndarray]) -> dict[str, np.ndarray]:
+    """Interpret ``program`` literally in float64 numpy (the semantics oracle).
+
+    Loops run point-by-point in authored order, so any transformed program
+    whose outputs ``np.array_equal`` this one is bit-identical, not merely
+    close.  Returns the full array environment (inputs copied, temps zeroed).
+    """
     env = {
         a.name: (
             np.zeros(a.shape, dtype=np.float64)
@@ -77,9 +83,11 @@ def execute_numpy(program: Program, inputs: Mapping[str, np.ndarray]) -> dict[st
     }
 
     def eval_aff(a: Affine, it_env: dict[str, int]) -> int:
+        """Evaluate an affine index expression under the iterator bindings."""
         return a.const + sum(c * it_env[k] for k, c in a.coeffs)
 
     def run(node: Node, it_env: dict[str, int]) -> None:
+        """Execute one loop/computation node under the iterator bindings."""
         if isinstance(node, Computation):
             if any(eval_aff(g, it_env) < 0 for g in node.guards):
                 return
@@ -172,7 +180,8 @@ class _VecAxis:
 
 
 class Unsupported(Exception):
-    pass
+    """A nest shape the structured JAX lowering cannot express (caller falls
+    back to the scan-based general path)."""
 
 
 def _written_arrays(node: Node) -> list[str]:
@@ -776,6 +785,7 @@ def compile_jax(
             )
 
     def fn(inputs: Mapping[str, Any]) -> dict[str, Any]:
+        """Run every nest under its schedule; returns the array environment."""
         env = {
             a.name: (
                 jnp.zeros(a.shape, dtype=jnp.float32)
@@ -797,5 +807,6 @@ def run_jax(
     inputs: Mapping[str, Any],
     per_nest: Schedule | Sequence[Schedule] | None = None,
 ):
+    """Compile ``program`` with ``compile_jax``, jit it, and run it once."""
     sched = per_nest if per_nest is not None else Schedule()
     return jax.jit(compile_jax(program, sched))(dict(inputs))

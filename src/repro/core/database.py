@@ -45,6 +45,7 @@ PRETUNED_DIR_ENV = "REPRO_PRETUNED_DIR"
 
 
 def pretuned_dir() -> Path:
+    """Directory holding shipped pretuned databases (env-overridable)."""
     d = os.environ.get(PRETUNED_DIR_ENV)
     return Path(d) if d else Path(__file__).resolve().parents[3] / "data"
 
@@ -79,6 +80,8 @@ def try_load_pretuned(backend: str = "xla") -> "TuningDatabase | None":
 
 @dataclass
 class Entry:
+    """One tuned nest: canonical fingerprint, embedding, winning recipe."""
+
     fingerprint: str
     embedding: np.ndarray
     recipe: Recipe
@@ -88,6 +91,13 @@ class Entry:
 
 @dataclass
 class TuningDatabase:
+    """Fingerprint-addressed recipe store with nearest-embedding transfer.
+
+    Exact fingerprint hits return the tuned recipe; misses fall back to the
+    nearest structural embedding within ``radius``.  Persistence is atomic
+    and checksummed (see the persistence section below).
+    """
+
     entries: list[Entry] = field(default_factory=list)
     radius: float = 6.0
     # Free-form tuning provenance (suite/size/backend/timestamp, written by
@@ -179,11 +189,13 @@ class TuningDatabase:
         return prev
 
     def lookup_exact(self, fingerprint: str) -> Recipe | None:
+        """The recipe tuned for exactly this fingerprint, or None."""
         self._sync()
         i = self._by_fp.get(fingerprint)
         return self.entries[i].recipe if i is not None else None
 
     def lookup_nearest(self, embedding: np.ndarray, k: int = 1) -> list[tuple[float, Entry]]:
+        """Up to ``k`` nearest entries within ``radius``, as (distance, entry)."""
         self._sync()
         if not self.entries:
             return []
@@ -253,6 +265,7 @@ class TuningDatabase:
         }
 
     def lookup(self, fingerprint: str, embedding: np.ndarray) -> tuple[Recipe | None, str]:
+        """Exact-then-nearest lookup; returns (recipe-or-None, provenance)."""
         r = self.lookup_exact(fingerprint)
         if r is not None:
             return r, "exact"
@@ -290,6 +303,7 @@ class TuningDatabase:
         os.replace(tmp, path)
 
     def save(self, path: str | Path) -> None:
+        """Atomically persist to JSON (checksum + ``.bak`` refresh on success)."""
         data = [
             {
                 "fingerprint": e.fingerprint,

@@ -226,6 +226,7 @@ def condense_sccs(adj: list[set[int]]) -> list[list[int]]:
     counter = [0]
 
     def strongconnect(v: int) -> None:
+        """Iterative Tarjan visit from ``v`` (explicit stack, no recursion)."""
         work = [(v, iter(sorted(adj[v])))]
         index[v] = low[v] = counter[0]
         counter[0] += 1
@@ -299,9 +300,12 @@ def condense_sccs(adj: list[set[int]]) -> list[list[int]]:
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)
 class DepVector:
-    directions: tuple[str, ...]  # aligned with the nest's iterator order
+    """One dependence direction vector, aligned with the nest's iterators."""
+
+    directions: tuple[str, ...]
 
     def permuted(self, perm: Sequence[int]) -> tuple[str, ...]:
+        """The directions reordered under a loop permutation."""
         return tuple(self.directions[p] for p in perm)
 
 

@@ -20,6 +20,13 @@ _MAX_DEPTH = 6
 
 
 def embed_nest(program: Program, nest: Node) -> np.ndarray:
+    """Structural feature vector (length ``DIM``) for one canonical nest.
+
+    Features: depth/computation/read/guard counts, carried and reduction
+    iterator counts, log-scaled trip counts, per-level stride profile, and
+    log flops/footprint/intensity.  Keys the tuning database's
+    nearest-neighbour transfer, so the layout is checked at runtime.
+    """
     if isinstance(nest, Computation):
         comps: list[Computation] = [nest]
         iterators: list[str] = []
@@ -30,6 +37,7 @@ def embed_nest(program: Program, nest: Node) -> np.ndarray:
         trips = {}
 
         def rec(n: Node) -> None:
+            """Collect trip counts from every loop in the nest."""
             if isinstance(n, Loop):
                 trips[n.iterator] = n.trip_count
                 for b in n.body:
@@ -96,4 +104,5 @@ def embed_nest(program: Program, nest: Node) -> np.ndarray:
 
 
 def distance(a: np.ndarray, b: np.ndarray) -> float:
+    """Euclidean distance between two nest embeddings."""
     return float(np.linalg.norm(a - b))

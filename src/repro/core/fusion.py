@@ -160,6 +160,7 @@ def fuse_siblings(
     kinds: dict[int, tuple[Node, str]] = {}
 
     def kind(n: Node) -> str:
+        """Memoized idiom kind of a candidate nest."""
         hit = kinds.get(id(n))
         if hit is None or hit[0] is not n:
             hit = (n, classify_nest(n).kind)
@@ -205,6 +206,7 @@ class FusionPass:
     name = "fusion"
 
     def run(self, program: Program, ctx: PassContext | None = None) -> Program:
+        """Fuse adjacent nests, attaching merge/guard counters to ``ctx``."""
         stats = _new_stats()
         out = replace(program, body=fuse_siblings(program.body, stats))
         if ctx is not None:
@@ -213,14 +215,29 @@ class FusionPass:
         return out
 
 
-def optimization_pipeline(fuse: bool = True) -> PassPipeline:
+def optimization_pipeline(fuse: bool = True, rewrite: bool = True) -> PassPipeline:
     """The full normalize-then-optimize pipeline the scheduler runs:
-    re-fusion slots in between stride minimization and canonical renaming,
-    so fingerprints stay stable however fusion rewrote the iterator sets.
-    ``fuse=False`` degrades to exactly the paper's a priori normalization.
+    COFFEE-style expression rewrites (LICM, expansion/factorization, CSE)
+    run on the maximally-fissioned form, then re-fusion slots in between
+    them and canonical renaming, so fingerprints stay stable however the
+    rewrites and fusion reshaped the nest structure.  ``fuse=False``
+    with ``rewrite=False`` degrades to exactly the paper's a priori
+    normalization.
     """
+    from .rewrite import rewrite_passes  # local import: rewrite -> passes -> ir
+
     pipeline = normalization_pipeline()
+    licm, expand_factor, cse = rewrite_passes()
+    if rewrite:
+        pipeline = pipeline.with_pass(licm, before="canonical_rename")
+        pipeline = pipeline.with_pass(expand_factor, before="canonical_rename")
+        pipeline.name = "optimize"
     if fuse:
         pipeline = pipeline.with_pass(FusionPass(), before="canonical_rename")
         pipeline.name = "optimize"
+    if rewrite:
+        # CSE hunts duplicates *across* the computations sharing one nest
+        # body, which only exist after re-fusion merges sibling nests — on
+        # the maximally-fissioned form every nest holds a single computation.
+        pipeline = pipeline.with_pass(cse, before="canonical_rename")
     return pipeline

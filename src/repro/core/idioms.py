@@ -18,6 +18,8 @@ from .ir import Computation, Loop, Node, loop_iterators, nest_computations
 
 @dataclass(frozen=True)
 class IdiomMatch:
+    """Result of idiom classification for one nest."""
+
     kind: str  # 'blas3' | 'blas2' | 'dot' | 'stencil' | 'elementwise' | 'reduction' | 'recurrence'
     detail: str = ""
 
@@ -36,6 +38,12 @@ def _trips(nest: Node) -> dict[str, int]:
 
 
 def classify_nest(nest: Node) -> IdiomMatch:
+    """Classify a canonical nest into the recipe-selection idiom taxonomy.
+
+    Carried dependences win (recurrence); otherwise single-computation
+    multiplicative reductions map to blas3/blas2/dot by output rank, and the
+    rest split into reduction, stencil and elementwise.
+    """
     comps = nest_computations(nest)
     iterators = list(loop_iterators(nest)) if isinstance(nest, Loop) else []
     vectors = nest_direction_vectors(iterators, _trips(nest), comps)

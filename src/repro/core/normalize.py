@@ -67,6 +67,7 @@ def scalar_expansion(program: Program) -> Program:
     arrays = {a.name: a for a in program.arrays}
 
     def subtree_accesses(n: Node) -> list[tuple[Computation, Access, bool]]:
+        """All (computation, access, is_write) triples under ``n``."""
         out = []
         if isinstance(n, Computation):
             for a in n.reads:
@@ -90,6 +91,7 @@ def scalar_expansion(program: Program) -> Program:
         return out
 
     def used_outside(name: str, inside: Node) -> bool:
+        """Whether array ``name`` is accessed anywhere outside ``inside``."""
         cnt_inside = sum(1 for _, a, _ in subtree_accesses(inside) if a.array == name)
         total = 0
         for top in program.body:
@@ -97,8 +99,10 @@ def scalar_expansion(program: Program) -> Program:
         return total != cnt_inside
 
     def add_index(n: Node, name: str, it: str) -> Node:
+        """Prepend iterator ``it`` to every access of array ``name``."""
         if isinstance(n, Computation):
             def fix(a: Access) -> Access:
+                """Rewrite one access of the expanded array."""
                 if a.array != name:
                     return a
                 return Access(a.array, (Affine.of(it),) + a.index)
@@ -111,6 +115,7 @@ def scalar_expansion(program: Program) -> Program:
         return replace(n, body=tuple(add_index(b, name, it) for b in n.body))
 
     def rec(node: Node) -> Node:
+        """Expand scalar temps carried by ``node``, innermost loops first."""
         if isinstance(node, Computation):
             return node
         node = replace(node, body=tuple(rec(b) for b in node.body))
@@ -193,6 +198,7 @@ def _fission_loop(loop: Loop, fresh: _Fresh) -> list[Node]:
 
 
 def maximal_fission(program: Program) -> Program:
+    """Split every top-level loop into the finest legal (SCC-atomic) nests."""
     fresh = _Fresh()
     body: list[Node] = []
     for node in program.body:
@@ -338,6 +344,7 @@ def _minimize_node(program: Program, node: Node) -> Node:
 
 
 def stride_minimization(program: Program) -> Program:
+    """Permute each nest so smaller-stride iterators sit innermost."""
     return replace(
         program, body=tuple(_minimize_node(program, n) for n in program.body)
     )
@@ -351,6 +358,7 @@ def canonical_rename(program: Program) -> Program:
     counter = [0]
 
     def ren(node: Node) -> Node:
+        """Rename one nest's iterators from the running counter."""
         if isinstance(node, Computation):
             return node
         its = loop_iterators(node)

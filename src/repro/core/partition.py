@@ -81,17 +81,21 @@ class ProgramPartition:
 
     @property
     def sharded(self) -> bool:
+        """True when at least one nest actually shards an iterator."""
         return any(n.iterator is not None for n in self.nests)
 
     def padded_extent(self, extent: int) -> int:
+        """``extent`` rounded up to a multiple of the shard count."""
         return -(-extent // self.n_shards) * self.n_shards
 
     def spec(self, shape: tuple[int, ...], name: str) -> PartitionSpec:
+        """The ``PartitionSpec`` for array ``name`` under this plan."""
         d = self.array_dims.get(name)
         return PartitionSpec(*[self.axis if i == d else None
                                for i in range(len(shape))])
 
     def describe(self) -> str:
+        """Human-readable rendering of the per-nest/per-array decisions."""
         lines = [f"partition over axis '{self.axis}' x{self.n_shards}:"]
         for k, np_ in enumerate(self.nests):
             if np_.iterator is None:
@@ -381,6 +385,7 @@ def compile_sharded(
     from ..kernels.compat import shard_map_compat
 
     def local_fn(*vals):
+        """Per-shard body: run every nest locally, all-reducing as planned."""
         env: dict[str, jnp.ndarray] = {}
         lvals = dict(zip(in_names, vals))
         for a in local.arrays:
@@ -400,6 +405,7 @@ def compile_sharded(
     )
 
     def fn(inputs: Mapping[str, Any]) -> dict[str, Any]:
+        """Pad inputs to shard multiples, run the shard map, unpad outputs."""
         vals = []
         for k in in_names:
             v = jnp.asarray(inputs[k])

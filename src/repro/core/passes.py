@@ -37,6 +37,7 @@ class Pass(Protocol):
     name: str
 
     def run(self, program: Program, ctx: "PassContext | None" = None) -> Program:
+        """Transform ``program``, optionally attaching stats to ``ctx``."""
         ...  # pragma: no cover - protocol
 
 
@@ -48,6 +49,7 @@ class FunctionPass:
     fn: Callable[[Program], Program]
 
     def run(self, program: Program, ctx: "PassContext | None" = None) -> Program:
+        """Apply the wrapped function once (``ctx`` is unused)."""
         return self.fn(program)
 
 
@@ -60,6 +62,7 @@ class FixpointPass:
     max_iter: int = 64
 
     def run(self, program: Program, ctx: "PassContext | None" = None) -> Program:
+        """Iterate to a fixed point, recording the iteration count."""
         cur = program
         for it in range(self.max_iter):
             nxt = self.fn(cur)
@@ -117,6 +120,7 @@ class PassContext:
         after: Program,
         cached: bool = False,
     ) -> PassRecord:
+        """Finalize one pass run into a ``PassRecord`` (folds pending stats)."""
         rec = PassRecord(
             name=name,
             seconds=seconds,
@@ -141,9 +145,11 @@ class PassContext:
 
     @property
     def total_seconds(self) -> float:
+        """Wall time summed over all recorded passes."""
         return sum(r.seconds for r in self.records)
 
     def stat(self, pass_name: str, key: str, default: Any = None) -> Any:
+        """A single stat from a pass's latest record (``default`` if absent)."""
         try:
             return self[pass_name].stats.get(key, default)
         except KeyError:
@@ -202,6 +208,7 @@ class PassPipeline:
 
     @property
     def names(self) -> tuple[str, ...]:
+        """The pass names in execution order."""
         return tuple(p.name for p in self._passes)
 
     def __getitem__(self, name: str) -> Pass:
@@ -227,6 +234,7 @@ class PassPipeline:
         return PassPipeline(passes, name=self.name)
 
     def without_pass(self, name: str) -> "PassPipeline":
+        """A new pipeline with the named pass removed (KeyError if unknown)."""
         if name not in self.names:
             raise KeyError(name)
         return PassPipeline(
@@ -240,6 +248,8 @@ class PassPipeline:
         ctx: PassContext | None = None,
         cache: "Any | None" = None,  # CompilationCache-compatible
     ) -> Program:
+        """Run every pass in order, recording into ``ctx`` and memoizing
+        per-pass results in ``cache`` when one is given."""
         cur = program
         for p in self._passes:
             t0 = time.perf_counter()
@@ -260,6 +270,7 @@ class PassPipeline:
         return cur
 
     def run_with_report(self, program: Program, snapshots: bool = False) -> tuple[Program, PassContext]:
+        """Run with a fresh ``PassContext``; returns (program, context)."""
         ctx = PassContext(snapshots=snapshots)
         out = self.run(program, ctx=ctx)
         return out, ctx

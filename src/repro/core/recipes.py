@@ -46,12 +46,14 @@ class Recipe:
     notes: str = ""
 
     def to_json(self) -> dict[str, Any]:
+        """JSON-serializable dict form (tile tuple becomes a list)."""
         d = dataclasses.asdict(self)
         d["tile"] = list(self.tile) if self.tile else None
         return d
 
     @staticmethod
     def from_json(d: dict[str, Any]) -> "Recipe":
+        """Rebuild a ``Recipe`` from its ``to_json`` form."""
         d = dict(d)
         if d.get("tile"):
             d["tile"] = tuple(d["tile"])

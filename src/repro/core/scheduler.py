@@ -55,6 +55,8 @@ from .search import (
 
 @dataclass
 class NestPlan:
+    """Scheduling decision for one canonical nest (recipe + its provenance)."""
+
     fingerprint: str
     idiom: str
     recipe: Recipe
@@ -63,6 +65,8 @@ class NestPlan:
 
 @dataclass
 class ProgramPlan:
+    """The normalized program plus one ``NestPlan`` per canonical nest."""
+
     program: Program  # normalized
     nests: list[NestPlan]
     # filled by ``Daisy.compile`` under a mesh: the partition planner's
@@ -71,6 +75,7 @@ class ProgramPlan:
 
     @property
     def normalized(self) -> bool:
+        """Plans are always built from the normalized program."""
         return True
 
 
@@ -118,6 +123,7 @@ def _nest_accesses(nest: Node):
 
 
 def random_inputs(program: Program, seed: int = 0, dtype=np.float32) -> dict[str, np.ndarray]:
+    """Uniform(0.1, 1) arrays for every input (non-temp) array."""
     rng = np.random.default_rng(seed)
     return {
         a.name: rng.uniform(0.1, 1.0, size=a.shape).astype(dtype)
@@ -126,12 +132,22 @@ def random_inputs(program: Program, seed: int = 0, dtype=np.float32) -> dict[str
 
 
 class Daisy:
+    """The daisy scheduler: normalize, plan recipes per nest, compile.
+
+    Runs the full optimization pipeline (a priori normalization +
+    COFFEE-style rewrites + re-fusion), resolves one ``Recipe`` per
+    canonical nest from the tuning database (exact, transfer, or idiom
+    default), and lowers through the JAX/Pallas backends — memoizing every
+    stage in a content-addressed cache.
+    """
+
     def __init__(
         self,
         db: TuningDatabase | None = None,
         interpret: bool = True,
         cache: CompilationCache | None = None,
         fuse: bool = True,
+        rewrite: bool = True,
         backend: str | None = None,
         mesh: Any = None,
         shard_axis: str = "data",
@@ -163,12 +179,14 @@ class Daisy:
         self.db = db if db is not None else TuningDatabase()
         self.interpret = interpret
         self.fuse = fuse
+        self.rewrite = rewrite
         self.mesh = mesh
         self.shard_axis = shard_axis
-        # The compiler pass pipeline: a priori normalization + canonical-form
-        # re-fusion.  Shared by plan/compile/seed so database fingerprints
-        # always refer to the same canonical form.
-        self.pipeline = optimization_pipeline(fuse=fuse)
+        # The compiler pass pipeline: a priori normalization + COFFEE-style
+        # expression rewrites + canonical-form re-fusion.  Shared by
+        # plan/compile/seed so database fingerprints always refer to the
+        # same canonical form.
+        self.pipeline = optimization_pipeline(fuse=fuse, rewrite=rewrite)
         # Content-addressed memo for the pipeline -> plan -> compile chain.
         # Keys include the database generation, so seeding new recipes
         # expires stale plans while normalized programs stay cached.
@@ -176,6 +194,7 @@ class Daisy:
 
     @property
     def cache_stats(self) -> CacheStats:
+        """Hit/miss counters of the underlying compilation cache."""
         return self.cache.stats
 
     # -- caching --------------------------------------------------------------
@@ -224,6 +243,7 @@ class Daisy:
     def plan(
         self, program: Program, normalize_first: bool = True, _fp: str | None = None
     ) -> ProgramPlan:
+        """Normalize (unless told not to) and resolve a recipe per nest."""
         fp = _fp or program_fingerprint(program)
         key = ("plan",) + self._plan_key(fp, normalize_first)
         cached = self.cache.get(key)
@@ -248,6 +268,7 @@ class Daisy:
     def compile(
         self, program: Program, normalize_first: bool = True, jit: bool = True
     ) -> tuple[Callable[[Mapping[str, np.ndarray]], dict], ProgramPlan]:
+        """Plan and lower ``program``; returns (callable, plan), memoized."""
         fp = program_fingerprint(program)
         key = ("compile", jit) + self._plan_key(fp, normalize_first)
         cached = self.cache.get(key)
@@ -391,6 +412,12 @@ class Daisy:
         repeats: int = 3,
         verbose: bool = False,
     ) -> None:
+        """Tune the database from seed programs (paper: the A variants).
+
+        Canonical nests are deduped across programs, epoch 1 resolves a
+        recipe per unique nest (library call for BLAS-3, evolutionary search
+        otherwise), and the winners are written back to ``self.db``.
+        """
         pending: list[_SeedItem] = []
         seen: set[str] = set()
         for prog in programs:

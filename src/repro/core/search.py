@@ -31,6 +31,7 @@ from .util import time_fn
 
 
 def default_recipe_for(idiom: IdiomMatch) -> Recipe:
+    """The idiom-keyed fallback recipe when the database has no entry."""
     if idiom.kind in ("blas3",):
         return Recipe(kind="einsum", notes=f"idiom:{idiom.kind}")
     if idiom.kind in ("blas2", "dot"):
@@ -188,6 +189,7 @@ def evolve_recipe(
     deadline = (time.monotonic() + deadline_s) if deadline_s is not None else None
 
     def out_of_time() -> bool:
+        """Whether the wall-clock deadline (if any) has expired."""
         return deadline is not None and time.monotonic() >= deadline
 
     pop = [seed_recipe] + [_mutate(seed_recipe, rng) for _ in range(population - 1)]
@@ -200,6 +202,7 @@ def evolve_recipe(
     timed: dict[Recipe, float] = {}
 
     def fitness(r: Recipe) -> float:
+        """Memoized wall time of one candidate recipe (lower is better)."""
         key = resolve(r) if resolve is not None else r
         if key not in timed:
             timed[key] = measure_recipe(

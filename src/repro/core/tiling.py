@@ -68,10 +68,12 @@ class TiledIter:
 
     @property
     def trip(self) -> int:
+        """Iteration count of the underlying loop range."""
         return max(0, self.stop - self.start)
 
     @property
     def n_tiles(self) -> int:
+        """Grid extent along this iterator (ceil-divided, at least 1)."""
         return max(1, -(-self.trip // self.tile))
 
 
@@ -90,6 +92,8 @@ class DimMap:
 
 @dataclass
 class TilePlan:
+    """Complete tiling decision for one nest: axis roles, grid, halos."""
+
     kind: str                         # 'parallel' | 'reduce'
     parallel: tuple[TiledIter, ...]   # loop order (outer -> inner)
     reduce_inner: tuple[TiledIter, ...]
@@ -107,13 +111,16 @@ class TilePlan:
 
     @property
     def axis_of(self) -> dict[str, int]:
+        """Iterator name -> position in the canonical slab axis order."""
         return {a.name: k for k, a in enumerate(self.axes)}
 
     @property
     def iter_of(self) -> dict[str, TiledIter]:
+        """Iterator name -> its ``TiledIter``."""
         return {a.name: a for a in self.axes}
 
     def access_dims(self, a: Access) -> list[DimMap]:
+        """Per-dimension ``DimMap`` of one access under this plan."""
         return [_dim_map(ix, self.iter_of) for ix in a.index]
 
 
@@ -259,6 +266,7 @@ def plan_nest_tiling(
             [trips[grid_red_it]] if grid_red_it else [])
 
         def est(ts: list[int]) -> int:
+            """VMEM estimate for a candidate tile assignment."""
             p = dict(zip(par_its + ([grid_red_it] if grid_red_it else []), ts))
             return _estimate_vmem(program, comps, p, trips, red_order)
 

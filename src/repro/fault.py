@@ -27,6 +27,26 @@ agnostic); (b) stragglers — per-step wall time over a multiple of the EMA,
 flagged for replacement (synchronous SPMD cannot proceed without the host);
 (c) numeric poison — NaN/inf gradients skipped inside the jitted step
 (``adamw_update``), NaN logits failing only the poisoned request.
+
+Injecting a deterministic failure schedule into a test or benchmark::
+
+    from repro.fault import FaultPlan
+
+    plan = FaultPlan(seed=7, rate=0.15, sites=("serve.decode",))
+    eng = ServingEngine(cfg, params, scfg, fault_plan=plan)
+    ...                       # ~15% of requests raise mid-decode
+    assert plan.fired         # the log of (site, key) strikes, asserted on
+
+and degrading a fragile compile across backends::
+
+    from repro.fault import compile_with_degradation
+
+    fn, backend, degradations = compile_with_degradation(daisy, program)
+    # backend == "xla" if the pallas rung failed compile-or-execute;
+    # degradations records (program, failed_backend, final_backend)
+
+See ``docs/architecture.md`` (Deployment layers) for how serving, tuning
+and persistence each consume this module.
 """
 from __future__ import annotations
 

@@ -16,9 +16,22 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable
 
-from ..core.ir import Access, Affine, Array, Computation, Loop, Program, acc, aff
+from ..core.ir import (
+    Access,
+    Affine,
+    Array,
+    Call,
+    Computation,
+    Const,
+    Loop,
+    Program,
+    Read,
+    acc,
+    aff,
+)
 
 ALPHA, BETA = 1.5, 1.2
+ZERO = Const(0.0)
 
 
 def L(it: str, n: int, *body, start: int = 0) -> Loop:
@@ -56,9 +69,9 @@ def _gemm_arrays(s):
 
 
 def _gemm_comps(i, j, k, j2):
-    scale = C("scale", acc("C", i, j), [acc("C", i, j)], lambda c: c * BETA)
+    scale = C("scale", acc("C", i, j), [acc("C", i, j)], Read(0) * BETA)
     mac = C("mac", acc("C", i, j2), [acc("A", i, k), acc("B", k, j2)],
-            lambda a, b: ALPHA * a * b, accumulate="+")
+            ALPHA * Read(0) * Read(1), accumulate="+")
     return scale, mac
 
 
@@ -103,12 +116,12 @@ def _2mm_arrays(s):
 
 
 def _2mm_nests(order1, order2, order3, s):
-    z = C("zero", acc("tmp", "i", "j"), [], lambda: 0.0)
+    z = C("zero", acc("tmp", "i", "j"), [], ZERO)
     m1 = C("m1", acc("tmp", "i", "j"), [acc("A", "i", "k"), acc("B", "k", "j")],
-           lambda a, b: ALPHA * a * b, accumulate="+")
-    sc = C("sc", acc("D", "p", "q"), [acc("D", "p", "q")], lambda d: d * BETA)
+           ALPHA * Read(0) * Read(1), accumulate="+")
+    sc = C("sc", acc("D", "p", "q"), [acc("D", "p", "q")], Read(0) * BETA)
     m2 = C("m2", acc("D", "p", "q"), [acc("tmp", "p", "r"), acc("C2", "r", "q")],
-           lambda t, c: t * c, accumulate="+")
+           Read(0) * Read(1), accumulate="+")
     dims = dict(i=s["ni"], j=s["nj"], k=s["nk"], p=s["ni"], q=s["nl"], r=s["nj"])
 
     def nest(order, comps):
@@ -165,9 +178,9 @@ def _3mm_arrays(s):
 
 def _3mm_stage(out, in1, in2, its, dims):
     i, j, k = its
-    z = C(f"z{out}", acc(out, i, j), [], lambda: 0.0)
+    z = C(f"z{out}", acc(out, i, j), [], ZERO)
     m = C(f"m{out}", acc(out, i, j), [acc(in1, i, k), acc(in2, k, j)],
-          lambda a, b: a * b, accumulate="+")
+          Read(0) * Read(1), accumulate="+")
     return z, m
 
 
@@ -213,10 +226,10 @@ def _syrk_arrays(s):
 
 def _syrk_comps():
     tri = aff("i", ("j", -1))  # i - j >= 0  <=>  j <= i
-    sc = C("sc", acc("C", "i", "j"), [acc("C", "i", "j")], lambda c: c * BETA,
+    sc = C("sc", acc("C", "i", "j"), [acc("C", "i", "j")], Read(0) * BETA,
            guards=[tri])
     mac = C("mac", acc("C", "i", "j"), [acc("A", "i", "k"), acc("A", "j", "k")],
-            lambda a, b: ALPHA * a * b, accumulate="+", guards=[tri])
+            ALPHA * Read(0) * Read(1), accumulate="+", guards=[tri])
     return sc, mac
 
 
@@ -260,12 +273,12 @@ def _syr2k_arrays(s):
 
 def _syr2k_comps():
     tri = aff("i", ("j", -1))
-    sc = C("sc", acc("C", "i", "j"), [acc("C", "i", "j")], lambda c: c * BETA,
+    sc = C("sc", acc("C", "i", "j"), [acc("C", "i", "j")], Read(0) * BETA,
            guards=[tri])
     mac1 = C("mac1", acc("C", "i", "j"), [acc("A", "j", "k"), acc("B", "i", "k")],
-             lambda a, b: ALPHA * a * b, accumulate="+", guards=[tri])
+             ALPHA * Read(0) * Read(1), accumulate="+", guards=[tri])
     mac2 = C("mac2", acc("C", "i", "j"), [acc("B", "j", "k"), acc("A", "i", "k")],
-             lambda b, a: ALPHA * b * a, accumulate="+", guards=[tri])
+             ALPHA * Read(0) * Read(1), accumulate="+", guards=[tri])
     return sc, mac1, mac2
 
 
@@ -303,12 +316,12 @@ def _atax_arrays(s):
 
 
 def _atax_comps():
-    zy = C("zy", acc("y", "jz"), [], lambda: 0.0)
-    zt = C("zt", acc("tmp", "i"), [], lambda: 0.0)
+    zy = C("zy", acc("y", "jz"), [], ZERO)
+    zt = C("zt", acc("tmp", "i"), [], ZERO)
     t1 = C("t1", acc("tmp", "i"), [acc("A", "i", "j"), acc("x", "j")],
-           lambda a, x: a * x, accumulate="+")
+           Read(0) * Read(1), accumulate="+")
     t2 = C("t2", acc("y", "j2"), [acc("A", "i", "j2"), acc("tmp", "i")],
-           lambda a, t: a * t, accumulate="+")
+           Read(0) * Read(1), accumulate="+")
     return zy, zt, t1, t2
 
 
@@ -345,12 +358,12 @@ def _bicg_arrays(sz):
 
 
 def _bicg_comps():
-    zs = C("zs", acc("s", "jz"), [], lambda: 0.0)
-    zq = C("zq", acc("q", "iz"), [], lambda: 0.0)
+    zs = C("zs", acc("s", "jz"), [], ZERO)
+    zq = C("zq", acc("q", "iz"), [], ZERO)
     cs = C("cs", acc("s", "j"), [acc("r", "i"), acc("A", "i", "j")],
-           lambda r, a: r * a, accumulate="+")
+           Read(0) * Read(1), accumulate="+")
     cq = C("cq", acc("q", "i"), [acc("A", "i", "j"), acc("p", "j")],
-           lambda a, p: a * p, accumulate="+")
+           Read(0) * Read(1), accumulate="+")
     return zs, zq, cs, cq
 
 
@@ -390,13 +403,13 @@ def _gemver_comps():
     a_up = C("a_up", acc("A", "i", "j"),
              [acc("A", "i", "j"), acc("u1", "i"), acc("v1", "j"),
               acc("u2", "i"), acc("v2", "j")],
-             lambda a, u1, v1, u2, v2: a + u1 * v1 + u2 * v2)
+             Read(0) + Read(1) * Read(2) + Read(3) * Read(4))
     x_up = C("x_up", acc("x", "j2"), [acc("A", "i2", "j2"), acc("y", "i2")],
-             lambda a, y: BETA * a * y, accumulate="+")
+             BETA * Read(0) * Read(1), accumulate="+")
     x_z = C("x_z", acc("x", "j3"), [acc("x", "j3"), acc("z", "j3")],
-            lambda x, z: x + z)
+            Read(0) + Read(1))
     w_up = C("w_up", acc("w", "i4"), [acc("A", "i4", "j4"), acc("x", "j4")],
-             lambda a, x: ALPHA * a * x, accumulate="+")
+             ALPHA * Read(0) * Read(1), accumulate="+")
     return a_up, x_up, x_z, w_up
 
 
@@ -434,14 +447,14 @@ def _gesummv_arrays(s):
 
 
 def _gesummv_comps():
-    zt = C("zt", acc("tmp", "i"), [], lambda: 0.0)
-    zy = C("zy", acc("y", "i"), [], lambda: 0.0)
+    zt = C("zt", acc("tmp", "i"), [], ZERO)
+    zy = C("zy", acc("y", "i"), [], ZERO)
     ct = C("ct", acc("tmp", "i"), [acc("A", "i", "j"), acc("x", "j")],
-           lambda a, x: a * x, accumulate="+")
+           Read(0) * Read(1), accumulate="+")
     cy = C("cy", acc("y", "i"), [acc("B", "i", "j"), acc("x", "j")],
-           lambda b, x: b * x, accumulate="+")
+           Read(0) * Read(1), accumulate="+")
     fin = C("fin", acc("y", "i"), [acc("tmp", "i"), acc("y", "i")],
-            lambda t, y: ALPHA * t + BETA * y)
+            ALPHA * Read(0) + BETA * Read(1))
     return zt, zy, ct, cy, fin
 
 
@@ -479,10 +492,10 @@ def _doitgen_arrays(s):
 
 
 def _doitgen_comps():
-    z = C("z", acc("sum", "r", "q", "p"), [], lambda: 0.0)
+    z = C("z", acc("sum", "r", "q", "p"), [], ZERO)
     m = C("m", acc("sum", "r", "q", "p"), [acc("A", "r", "q", "s"), acc("C4", "s", "p")],
-          lambda a, c: a * c, accumulate="+")
-    cp = C("cp", acc("A", "r", "q", "p2"), [acc("sum", "r", "q", "p2")], lambda x: x)
+          Read(0) * Read(1), accumulate="+")
+    cp = C("cp", acc("A", "r", "q", "p2"), [acc("sum", "r", "q", "p2")], Read(0))
     return z, m, cp
 
 
@@ -523,7 +536,7 @@ def _stencil5(name, dst, src, i, j):
              [acc(src, i, j),
               acc(src, i, aff(j, const=-1)), acc(src, i, aff(j, const=1)),
               acc(src, aff(i, const=1), j), acc(src, aff(i, const=-1), j)],
-             lambda c, w, e, s_, n_: 0.2 * (c + w + e + s_ + n_))
+             0.2 * (Read(0) + Read(1) + Read(2) + Read(3) + Read(4)))
 
 
 def jacobi2d_a(s):
@@ -569,8 +582,9 @@ def _stencil7(name, dst, src, i, j, k):
               acc(src, aff(i, const=1), j, k), acc(src, aff(i, const=-1), j, k),
               acc(src, i, aff(j, const=1), k), acc(src, i, aff(j, const=-1), k),
               acc(src, i, j, aff(k, const=1)), acc(src, i, j, aff(k, const=-1))],
-             lambda c, ip, im, jp, jm, kp, km: c + 0.125 * (ip - 2.0 * c + im)
-             + 0.125 * (jp - 2.0 * c + jm) + 0.125 * (kp - 2.0 * c + km))
+             Read(0) + 0.125 * (Read(1) - 2.0 * Read(0) + Read(2))
+             + 0.125 * (Read(3) - 2.0 * Read(0) + Read(4))
+             + 0.125 * (Read(5) - 2.0 * Read(0) + Read(6)))
 
 
 def heat3d_a(s):
@@ -615,20 +629,20 @@ def _fdtd_arrays(s):
 
 
 def _fdtd_comps():
-    s0 = C("s0", acc("ey", aff(const=0), "j0"), [acc("fict", "t")], lambda f: f)
+    s0 = C("s0", acc("ey", aff(const=0), "j0"), [acc("fict", "t")], Read(0))
     s1 = C("s1", acc("ey", "i1", "j1"),
            [acc("ey", "i1", "j1"), acc("hz", "i1", "j1"),
             acc("hz", aff("i1", const=-1), "j1")],
-           lambda e, h, hm: e - 0.5 * (h - hm))
+           Read(0) - 0.5 * (Read(1) - Read(2)))
     s2 = C("s2", acc("ex", "i2", "j2"),
            [acc("ex", "i2", "j2"), acc("hz", "i2", "j2"),
             acc("hz", "i2", aff("j2", const=-1))],
-           lambda e, h, hm: e - 0.5 * (h - hm))
+           Read(0) - 0.5 * (Read(1) - Read(2)))
     s3 = C("s3", acc("hz", "i3", "j3"),
            [acc("hz", "i3", "j3"), acc("ex", "i3", aff("j3", const=1)),
             acc("ex", "i3", "j3"), acc("ey", aff("i3", const=1), "j3"),
             acc("ey", "i3", "j3")],
-           lambda h, exp_, ex_, eyp, ey_: h - 0.7 * (exp_ - ex_ + eyp - ey_))
+           Read(0) - 0.7 * (Read(1) - Read(2) + Read(3) - Read(4)))
     return s0, s1, s2, s3
 
 
@@ -673,13 +687,13 @@ def _corr_arrays(s):
 
 
 def _corr_comps(n_float):
-    zm = C("zm", acc("mean", "j"), [], lambda: 0.0)
-    sm = C("sm", acc("mean", "j"), [acc("data", "i", "j")], lambda d: d,
+    zm = C("zm", acc("mean", "j"), [], ZERO)
+    sm = C("sm", acc("mean", "j"), [acc("data", "i", "j")], Read(0),
            accumulate="+")
-    dm = C("dm", acc("mean", "j2"), [acc("mean", "j2")], lambda m_: m_ / n_float)
-    zs = C("zs", acc("stddev", "j3"), [], lambda: 0.0)
+    dm = C("dm", acc("mean", "j2"), [acc("mean", "j2")], Read(0) / n_float)
+    zs = C("zs", acc("stddev", "j3"), [], ZERO)
     ss = C("ss", acc("stddev", "j3"), [acc("data", "i3", "j3"), acc("mean", "j3")],
-           lambda d, m_: (d - m_) * (d - m_), accumulate="+")
+           (Read(0) - Read(1)) * (Read(0) - Read(1)), accumulate="+")
     import numpy as _np
 
     def _finish_std(s_):
@@ -689,17 +703,18 @@ def _corr_comps(n_float):
         mod = jnp if not isinstance(s_, (float, _np.floating, _np.ndarray)) else _np
         return mod.where(x <= 0.1, 1.0, x)
 
-    ds = C("ds", acc("stddev", "j4"), [acc("stddev", "j4")], _finish_std)
+    ds = C("ds", acc("stddev", "j4"), [acc("stddev", "j4")],
+           Call("finish_std", _finish_std, (Read(0),)))
     cn = C("cn", acc("data", "i5", "j5"),
            [acc("data", "i5", "j5"), acc("mean", "j5"), acc("stddev", "j5")],
-           lambda d, m_, s_: (d - m_) / ((n_float ** 0.5) * s_))
-    zc = C("zc", acc("corr", "k1", "k2"), [], lambda: 1.0)
+           (Read(0) - Read(1)) / ((n_float ** 0.5) * Read(2)))
+    zc = C("zc", acc("corr", "k1", "k2"), [], Const(1.0))
     cc = C("cc", acc("corr", "k3", "k4"),
            [acc("data", "i6", "k3"), acc("data", "i6", "k4")],
-           lambda a, b: a * b, accumulate="+",
+           Read(0) * Read(1), accumulate="+",
            guards=[aff("k4", ("k3", -1), const=-1)])  # k4 > k3
     sym = C("sym", acc("corr", "k6", "k5"), [acc("corr", "k5", "k6")],
-            lambda c: c, guards=[aff("k6", ("k5", -1), const=-1)])
+            Read(0), guards=[aff("k6", ("k5", -1), const=-1)])
     return zm, sm, dm, zs, ss, ds, cn, zc, cc, sym
 
 
@@ -746,20 +761,20 @@ def _cov_arrays(s):
 
 
 def _cov_comps(n_float):
-    zm = C("zm", acc("mean", "j"), [], lambda: 0.0)
-    sm = C("sm", acc("mean", "j"), [acc("data", "i", "j")], lambda d: d,
+    zm = C("zm", acc("mean", "j"), [], ZERO)
+    sm = C("sm", acc("mean", "j"), [acc("data", "i", "j")], Read(0),
            accumulate="+")
-    dm = C("dm", acc("mean", "j2"), [acc("mean", "j2")], lambda m_: m_ / n_float)
+    dm = C("dm", acc("mean", "j2"), [acc("mean", "j2")], Read(0) / n_float)
     cn = C("cn", acc("data", "i5", "j5"), [acc("data", "i5", "j5"), acc("mean", "j5")],
-           lambda d, m_: d - m_)
-    zc = C("zc", acc("cov", "k1", "k2"), [], lambda: 0.0,
+           Read(0) - Read(1))
+    zc = C("zc", acc("cov", "k1", "k2"), [], ZERO,
            guards=[aff("k2", ("k1", -1))])  # k2 >= k1
     cc = C("cc", acc("cov", "k3", "k4"),
            [acc("data", "i6", "k3"), acc("data", "i6", "k4")],
-           lambda a, b: a * b / (n_float - 1.0), accumulate="+",
+           Read(0) * Read(1) / (n_float - 1.0), accumulate="+",
            guards=[aff("k4", ("k3", -1))])
     sym = C("sym", acc("cov", "k6", "k5"), [acc("cov", "k5", "k6")],
-            lambda c: c, guards=[aff("k6", ("k5", -1), const=-1)])
+            Read(0), guards=[aff("k6", ("k5", -1), const=-1)])
     return zm, sm, dm, cn, zc, cc, sym
 
 

@@ -51,6 +51,21 @@ Failure model (request-scoped — one bad request never kills the batch):
 Deterministic fault injection (tests + ``bench_resilience``): pass a seeded
 ``fault.FaultPlan``; sites ``serve.prefill`` / ``serve.decode`` /
 ``serve.logits`` / ``serve.step`` poison exactly the scheduled requests.
+
+Minimal serving loop::
+
+    from repro.serve import ServeConfig, ServingEngine
+
+    eng = ServingEngine(cfg, params, ServeConfig(batch_slots=8, max_len=512))
+    h = eng.submit(prompt_tokens, on_token=lambda h, t: print(h.rid, t))
+    while not h.done:          # or h.result() to block for this request,
+        eng.step()             # or eng.drain() to run everything
+    print(h.tokens)
+
+Request states: ``QUEUED -> RUNNING -> {DONE, FAILED, TIMED_OUT,
+CANCELLED}``; terminal handles expose ``.error`` and re-raise it from
+``.result()``.  See ``docs/architecture.md`` (Deployment layers) for the
+surrounding system and ``repro.autotune`` for the tuner hook.
 """
 from __future__ import annotations
 

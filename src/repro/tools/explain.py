@@ -3,17 +3,20 @@
 Usage:
     PYTHONPATH=src python -m repro.tools.explain gemm
     PYTHONPATH=src python -m repro.tools.explain cloudsc_erosion --no-fuse
+    PYTHONPATH=src python -m repro.tools.explain saturation_chain --no-rewrite
     PYTHONPATH=src python -m repro.tools.explain 2mm --variant np --size bench --ir
 
-Prints the per-pass report (wall time, nest/computation deltas, fusion
-stats) followed by the canonical nests with their idiom classification and
-the recipe the daisy scheduler would resolve for each.
+Prints the per-pass report (wall time, nest/computation deltas, and every
+custom stat a pass attached — fusion merge counts, LICM hoists and flop
+deltas, expansion/CSE counts — rendered verbatim, never filtered to a
+known-key list) followed by the canonical nests with their idiom
+classification and the recipe the daisy scheduler would resolve for each.
 """
 from __future__ import annotations
 
 import argparse
 
-from ..cloudsc import erosion_program, mini_cloudsc_program
+from ..cloudsc import erosion_program, mini_cloudsc_program, saturation_chain_program
 from ..core import Daisy
 from ..core.ir import Loop, Program, loop_iterators, nest_computations
 from ..polybench import BENCHMARKS
@@ -23,6 +26,9 @@ EXTRA = {
         nproma=128 if size == "bench" else 8, klev=137 if size == "bench" else 4
     ),
     "cloudsc_scheme": lambda size: mini_cloudsc_program(
+        nproma=128 if size == "bench" else 8, klev=137 if size == "bench" else 5
+    ),
+    "saturation_chain": lambda size: saturation_chain_program(
         nproma=128 if size == "bench" else 8, klev=137 if size == "bench" else 5
     ),
 }
@@ -55,8 +61,10 @@ def _trips(nest, its):
     return [trips[i] for i in its]
 
 
-def explain(program: Program, fuse: bool = True, show_ir: bool = False) -> str:
-    daisy = Daisy(fuse=fuse)
+def explain(program: Program, fuse: bool = True, rewrite: bool = True,
+            show_ir: bool = False) -> str:
+    """Render the per-pass report and canonical-nest plan for ``program``."""
+    daisy = Daisy(fuse=fuse, rewrite=rewrite)
     ctx = daisy.explain(program, snapshots=show_ir)
     plan = daisy.plan(program)
     lines = [
@@ -86,6 +94,9 @@ def main() -> None:
     ap.add_argument("--size", default="mini", choices=["mini", "bench"])
     ap.add_argument("--no-fuse", dest="fuse", action="store_false",
                     help="stop after a priori normalization (no re-fusion)")
+    ap.add_argument("--no-rewrite", dest="rewrite", action="store_false",
+                    help="skip the expression rewrite passes (licm, "
+                         "expand_factor, cse)")
     ap.add_argument("--ir", action="store_true", help="also print IR fingerprints")
     args = ap.parse_args()
 
@@ -95,7 +106,7 @@ def main() -> None:
         prog = BENCHMARKS[args.program].make(args.variant, args.size)
     else:
         raise SystemExit(f"unknown program {args.program!r}")
-    print(explain(prog, fuse=args.fuse, show_ir=args.ir))
+    print(explain(prog, fuse=args.fuse, rewrite=args.rewrite, show_ir=args.ir))
 
 
 if __name__ == "__main__":

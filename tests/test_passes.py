@@ -33,6 +33,10 @@ class TestPipelineStructure:
             "stride_minimization", "canonical_rename",
         )
         assert optimization_pipeline(fuse=True).names == (
+            "scalar_expansion", "maximal_fission", "stride_minimization",
+            "licm", "expand_factor", "fusion", "cse", "canonical_rename",
+        )
+        assert optimization_pipeline(fuse=True, rewrite=False).names == (
             "scalar_expansion", "maximal_fission",
             "stride_minimization", "fusion", "canonical_rename",
         )

@@ -1,0 +1,243 @@
+"""COFFEE-style rewrite passes: LICM, expansion/factorization, CSE.
+
+Each transformation is checked against the ``execute_numpy`` float64 oracle
+— bit-identical for LICM/CSE (same float ops, just fewer), allclose for
+expansion/factorization (reassociation) — plus the pass-stat plumbing the
+explain CLI renders.
+"""
+import numpy as np
+
+from repro.cloudsc import saturation_chain_inputs, saturation_chain_program
+from repro.cloudsc.scheme import SPECIES
+from repro.core import (
+    Array,
+    Computation,
+    Const,
+    FunctionPass,
+    Loop,
+    PassContext,
+    PassPipeline,
+    Program,
+    Read,
+    acc,
+    execute_numpy,
+    expr_ops,
+    optimization_pipeline,
+    program_fingerprint,
+)
+from repro.core.idioms import classify_nest
+from repro.core.ir import Call, as_expr, emax, emin
+from repro.core.scheduler import random_inputs
+
+SAT_OUTS = [f"PFLUX_{nm}" for nm, _, _ in SPECIES] + ["TEND"]
+
+
+def _run(prog, rewrite=True, fuse=True):
+    ctx = PassContext()
+    out = optimization_pipeline(fuse=fuse, rewrite=rewrite).run(prog, ctx)
+    return out, ctx
+
+
+class TestExprCallable:
+    def test_tree_matches_python_semantics(self):
+        a, b, c = Read(0), Read(1), Read(2)
+        e = emin(1.0, emax(a, -b)) * (a + b - c / 2.0) + (-a)
+        f = e.to_callable()
+        ref = lambda a, b, c: min(1.0, max(a, -b)) * (a + b - c / 2.0) + (-a)  # noqa: E731
+        rng = np.random.default_rng(0)
+        for _ in range(20):
+            x, y, z = rng.uniform(-3, 3, size=3)
+            assert np.isclose(f(x, y, z), ref(x, y, z), rtol=1e-12)
+
+    def test_call_nodes_dispatch_the_wrapped_function(self):
+        e = Call("np_exp", np.exp, (Read(0) * 2.0,)) + 1.0
+        assert np.isclose(e(0.5), np.exp(1.0) + 1.0)
+        assert expr_ops(e) >= 2
+
+    def test_dunder_call_equals_to_callable(self):
+        e = (Read(0) + 1.5) * Read(1)
+        assert e(2.0, 3.0) == e.to_callable()(2.0, 3.0) == 10.5
+
+    def test_const_coercion(self):
+        assert isinstance(as_expr(3.0), Const)
+        assert (Read(0) + 1.0)(2.0) == 3.0
+
+
+def _two_nest_invariant_program(write_s: bool) -> Program:
+    """Two 3-deep nests sharing a JM-invariant chain over ``S``; optionally
+    a leading nest that writes ``S`` (which must block cross-nest sharing)."""
+    arrays = [Array("S", (4, 6)), Array("O1", (4, 6, 3)), Array("O2", (4, 6, 5))]
+    body = []
+    if write_s:
+        up = Computation("up", acc("S", "JKU", "JLU"), (acc("S", "JKU", "JLU"),),
+                         Read(0) * 2.0)
+        body.append(Loop("JKU", 4, body=(Loop("JLU", 6, body=(up,)),)))
+    for k, (out, nb) in enumerate((("O1", 3), ("O2", 5))):
+        JK, JL, JM = f"JK{k}", f"JL{k}", f"JM{k}"
+        comp = Computation(
+            f"c{k}", acc(out, JK, JL, JM), (acc("S", JK, JL),),
+            (Read(0) + 1.0) * (Read(0) + 1.0) + 0.5)
+        body.append(Loop(JK, 4, body=(Loop(JL, 6, body=(
+            Loop(JM, nb, body=(comp,)),)),)))
+    return Program("inv", tuple(arrays), tuple(body), temps=("O1", "O2"))
+
+
+class TestLICM:
+    def test_saturation_chain_hoists_once_and_shares(self):
+        prog = saturation_chain_program(8, 5)
+        out, ctx = _run(prog)
+        assert ctx.stat("licm", "hoisted") == 1
+        assert ctx.stat("licm", "reused") == 3
+        assert ctx.stat("licm", "flops_after") < ctx.stat("licm", "flops_before")
+        temps = [a.name for a in out.arrays if a.name.startswith("_licm")]
+        assert temps == ["_licm0"]
+        assert "_licm0" in out.temps
+
+    def test_saturation_chain_bit_identical_to_oracle(self):
+        prog = saturation_chain_program(8, 5)
+        ins = saturation_chain_inputs(8, 5, seed=4)
+        ref = execute_numpy(prog, dict(ins))
+        for rewrite in (True, False):
+            out, _ = _run(prog, rewrite=rewrite)
+            got = execute_numpy(out, dict(ins))
+            for k in SAT_OUTS:
+                assert np.array_equal(got[k], ref[k]), (rewrite, k)
+
+    def test_cross_nest_sharing_requires_unwritten_sources(self):
+        # S is never written: one temp, one reuse
+        _, ctx = _run(_two_nest_invariant_program(write_s=False))
+        assert ctx.stat("licm", "hoisted") == 1
+        assert ctx.stat("licm", "reused") == 1
+        # S is written by an earlier nest: each nest gets its own temp
+        out, ctx = _run(_two_nest_invariant_program(write_s=True))
+        assert ctx.stat("licm", "hoisted") == 2
+        assert not ctx.stat("licm", "reused")
+        ins = random_inputs(_two_nest_invariant_program(True), seed=5,
+                            dtype=np.float64)
+        ref = execute_numpy(_two_nest_invariant_program(True), dict(ins))
+        got = execute_numpy(out, dict(ins))
+        for k in ("O1", "O2"):
+            assert np.array_equal(got[k], ref[k])
+
+    def test_cheap_subexpressions_stay_put(self):
+        # a single add (1 op, no Call) is below MIN_HOIST_OPS
+        comp = Computation("c", acc("O", "i", "j", "m"), (acc("S", "i", "j"),),
+                           Read(0) + 1.0)
+        prog = Program("cheap", (Array("S", (4, 6)), Array("O", (4, 6, 3))),
+                       (Loop("i", 4, body=(Loop("j", 6, body=(
+                           Loop("m", 3, body=(comp,)),)),)),), temps=("O",))
+        _, ctx = _run(prog)
+        assert not ctx.stat("licm", "hoisted")
+
+
+class TestExpandFactor:
+    def _sum_contraction(self, n=6):
+        z = Computation("zero", acc("C", "i", "j"), (), Const(0.0))
+        m = Computation(
+            "m", acc("C", "i", "j"),
+            (acc("A", "i", "k"), acc("E", "i", "k"), acc("B", "k", "j")),
+            (Read(0) + Read(1)) * (1.5 * Read(2)), accumulate="+")
+        return Program("msum", (Array("A", (n, n)), Array("E", (n, n)),
+                                Array("B", (n, n)), Array("C", (n, n))),
+                       (Loop("i", n, body=(Loop("j", n, body=(
+                           z, Loop("k", n, body=(m,)))),)),), temps=("C",))
+
+    def test_expansion_splits_sum_contraction_into_blas3(self):
+        prog = self._sum_contraction()
+        out, ctx = _run(prog)
+        assert ctx.stat("expand_factor", "expanded") >= 1
+        kinds = [classify_nest(n).kind for n in out.body]
+        assert kinds.count("blas3") == 2
+        no, _ = _run(prog, rewrite=False)
+        assert "blas3" not in [classify_nest(n).kind for n in no.body]
+
+    def test_expansion_value_preserving(self):
+        prog = self._sum_contraction()
+        ins = random_inputs(prog, seed=6, dtype=np.float64)
+        ref = execute_numpy(prog, dict(ins))
+        got = execute_numpy(_run(prog)[0], dict(ins))
+        assert np.allclose(got["C"], ref["C"], rtol=1e-12, atol=1e-12)
+
+    def test_factorization_reduces_flops(self):
+        # a*b + a*c -> a*(b+c): 3 ops -> 2 ops per point
+        comp = Computation(
+            "f", acc("O", "i"), (acc("A", "i"), acc("B", "i"), acc("C", "i")),
+            Read(0) * Read(1) + Read(0) * Read(2))
+        prog = Program("fac", (Array("A", (8,)), Array("B", (8,)),
+                               Array("C", (8,)), Array("O", (8,))),
+                       (Loop("i", 8, body=(comp,)),), temps=("O",))
+        out, ctx = _run(prog)
+        assert ctx.stat("expand_factor", "factored") >= 1
+        assert ctx.stat("expand_factor", "flops_after") < \
+            ctx.stat("expand_factor", "flops_before")
+        ins = random_inputs(prog, seed=7, dtype=np.float64)
+        ref = execute_numpy(prog, dict(ins))
+        got = execute_numpy(out, dict(ins))
+        assert np.allclose(got["O"], ref["O"], rtol=1e-12)
+
+
+class TestCSE:
+    def _shared_subexpr_program(self, n=8):
+        sub = (Read(0) + 2.0) * (Read(0) - 1.0)
+        c1 = Computation("c1", acc("O1", "i"), (acc("X", "i"),), sub * 3.0)
+        c2 = Computation("c2", acc("O2", "i"), (acc("X", "i"),), sub + 0.5)
+        return Program("share", (Array("X", (n,)), Array("O1", (n,)),
+                                 Array("O2", (n,))),
+                       (Loop("i", n, body=(c1, c2)),), temps=("O1", "O2"))
+
+    def test_cse_across_fused_computations(self):
+        prog = self._shared_subexpr_program()
+        out, ctx = _run(prog)
+        assert ctx.stat("cse", "eliminated") >= 1
+        assert any(a.name.startswith("_cse") for a in out.arrays)
+
+    def test_cse_bit_identical(self):
+        prog = self._shared_subexpr_program()
+        ins = random_inputs(prog, seed=8, dtype=np.float64)
+        ref = execute_numpy(prog, dict(ins))
+        got = execute_numpy(_run(prog)[0], dict(ins))
+        for k in ("O1", "O2"):
+            assert np.array_equal(got[k], ref[k])
+
+
+class TestOpaqueExprPrograms:
+    def test_rewrites_are_identity_on_opaque_callables(self):
+        comp = Computation("c", acc("O", "i", "j", "m"), (acc("S", "i", "j"),),
+                           lambda v: (v + 1.0) * (v + 1.0) + 0.5)
+        prog = Program("opaque", (Array("S", (4, 6)), Array("O", (4, 6, 3))),
+                       (Loop("i", 4, body=(Loop("j", 6, body=(
+                           Loop("m", 3, body=(comp,)),)),)),), temps=("O",))
+        rw, ctx = _run(prog)
+        no, _ = _run(prog, rewrite=False)
+        assert program_fingerprint(rw) == program_fingerprint(no)
+        assert not ctx.stat("licm", "hoisted")
+        assert not ctx.stat("expand_factor", "expanded")
+        assert not ctx.stat("cse", "eliminated")
+
+
+class TestStatReporting:
+    def test_unknown_custom_stats_pass_through_report(self):
+        # regression: the report must render any stat a pass attaches, not
+        # just a known-key whitelist
+        def mark(p):
+            return p
+
+        pipe = PassPipeline([FunctionPass("mypass", mark)])
+        ctx = PassContext()
+        ctx.add_stat("mypass", "exotic_stat", 42)
+        pipe.run(saturation_chain_program(4, 3), ctx=ctx)
+        assert "exotic_stat=42" in ctx.report()
+
+    def test_explain_renders_rewrite_stats(self):
+        from repro.tools.explain import explain
+
+        text = explain(saturation_chain_program(8, 5))
+        assert "licm" in text
+        assert "hoisted=1" in text and "reused=3" in text
+        assert "flops_before=" in text and "flops_after=" in text
+
+    def test_explain_no_rewrite_drops_the_passes(self):
+        from repro.tools.explain import explain
+
+        text = explain(saturation_chain_program(8, 5), rewrite=False)
+        assert "licm" not in text and "expand_factor" not in text
